@@ -1,0 +1,25 @@
+"""Benchmark timing helpers (CPU host timings; bandwidth derived as bytes/time)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def timeit(fn, *args, repeats: int = 5, warmup: int = 2):
+    """Median wall time (s) of jitted fn; blocks on results."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def row(name: str, seconds: float, derived: str = ""):
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)

@@ -1,0 +1,228 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  All sections run on the host CPU (the
+TARGET is TPU; these benchmarks validate relative behaviour — scan strategy
+ratios, traffic counts, operator scaling — rather than absolute device numbers;
+the TPU-side projection lives in EXPERIMENTS.md §Roofline).
+
+  Fig 3  single-core scan: vector CumSum vs ScanU vs ScanUL1
+  Fig 5  batched scan: ScanUL1/ScanU execution-time ratio grid
+  Fig 8  MCScan bandwidth vs length (s = 32/64/128) + copy roofline  [8 devices]
+  Fig 9  MCScan int8 vs fp16 GElems/s                                [8 devices]
+  Fig 10 compress vs baseline masked-select
+  Fig 11 radix sort vs jnp.sort (fp16)
+  Fig 12 batched scan bandwidth vs batch size (len 65K)
+  Fig 13 top-p sampling: baseline sort+cumsum vs radix+MCScan build
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import row, timeit  # noqa: E402
+from repro.core import scan  # noqa: E402
+from repro.core.primitives import (compress, radix_sort,  # noqa: E402
+                                   top_p_sample)
+
+QUICK_LENS = [4096, 65536, 1 << 20]
+FULL_LENS = [4096, 65536, 1 << 20, 1 << 23]
+
+
+def fig3_single_scan(lens):
+    """Paper Fig. 3: execution time of vector-only CumSum vs ScanU/ScanUL1."""
+    for n in lens:
+        x = jnp.asarray(np.random.default_rng(0).standard_normal(n), jnp.float32)
+        fns = {
+            "vec_only": jax.jit(lambda a: jnp.cumsum(a)),
+            "scanu": jax.jit(functools.partial(scan, method="matmul",
+                                               variant="scanu", tile_s=128)),
+            "scanul1": jax.jit(functools.partial(scan, method="matmul",
+                                                 variant="scanul1", tile_s=128)),
+        }
+        base = None
+        for name, fn in fns.items():
+            t = timeit(fn, x)
+            base = base or t
+            row(f"fig3/{name}/n={n}", t,
+                f"speedup_vs_vec={base / t:.2f}x;GB/s={8 * n / t / 1e9:.2f}")
+
+
+def fig5_batched_ratio():
+    """Paper Fig. 5: ScanUL1 vs ScanU time ratio across (batch, length)."""
+    for batch in (4, 16, 64):
+        for n in (1024, 4096, 16384):
+            x = jnp.asarray(
+                np.random.default_rng(1).standard_normal((batch, n)), jnp.float32)
+            tu = timeit(jax.jit(functools.partial(
+                scan, method="matmul", variant="scanu", tile_s=32)), x)
+            tl = timeit(jax.jit(functools.partial(
+                scan, method="matmul", variant="scanul1", tile_s=32)), x)
+            row(f"fig5/ratio/b={batch}/n={n}", tl,
+                f"scanul1_over_scanu={tl / tu:.3f}")
+
+
+_MC_SUB = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, time, functools
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import AxisType
+sys.path.insert(0, {src!r})
+from repro.core import mcscan
+mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+for spec in {specs!r}:
+    n, s, dt = spec
+    dtype = jnp.int8 if dt == "int8" else (jnp.bfloat16 if dt == "bf16" else jnp.float32)
+    if dt == "int8":
+        x = jnp.asarray(np.random.default_rng(0).integers(-3, 4, (1, n)), dtype)
+    else:
+        x = jnp.asarray(np.random.default_rng(0).standard_normal((1, n)), dtype)
+    fn = jax.jit(lambda a: mcscan(a, mesh, "data", tile_s=s))
+    out = fn(x); jax.block_until_ready(out)
+    ts = []
+    for _ in range(5):
+        t0 = time.perf_counter(); jax.block_until_ready(fn(x))
+        ts.append(time.perf_counter() - t0)
+    t = float(np.median(ts))
+    nbytes = x.dtype.itemsize * n + out.dtype.itemsize * n
+    print(f"MC,{{n}},{{s}},{{dt}},{{t}},{{nbytes}}")
+# copy baseline
+for n in sorted(set(sp[0] for sp in {specs!r})):
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((1, n)), jnp.float32)
+    fn = jax.jit(lambda a: a + 0.0)
+    jax.block_until_ready(fn(x))
+    ts = []
+    for _ in range(5):
+        t0 = time.perf_counter(); jax.block_until_ready(fn(x))
+        ts.append(time.perf_counter() - t0)
+    print(f"COPY,{{n}},0,f32,{{float(np.median(ts))}},{{8 * n}}")
+"""
+
+
+def fig8_fig9_mcscan(lens):
+    """Paper Figs. 8/9: multi-device MCScan bandwidth + int8 vs fp16 elems/s.
+
+    Needs >1 device, so runs in a subprocess with 8 host devices.
+    """
+    specs = [(n, s, "f32") for n in lens for s in (32, 64, 128)]
+    specs += [(lens[-1], 128, "bf16"), (lens[-1], 128, "int8")]
+    code = _MC_SUB.format(src=os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")), specs=specs)
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env, timeout=1200)
+    if r.returncode != 0:
+        row("fig8/mcscan/ERROR", 0.0, r.stderr.strip()[-120:].replace(",", ";"))
+        return
+    elems = {}
+    for line in r.stdout.splitlines():
+        parts = line.strip().split(",")
+        if parts[0] == "MC":
+            n, s, dt, t, nb = int(parts[1]), int(parts[2]), parts[3], \
+                float(parts[4]), int(parts[5])
+            row(f"fig8/mcscan/n={n}/s={s}/{dt}", t,
+                f"GB/s={nb / t / 1e9:.2f};GElems/s={n / t / 1e9:.3f}")
+            elems[dt] = n / t / 1e9
+        elif parts[0] == "COPY":
+            n, t, nb = int(parts[1]), float(parts[4]), int(parts[5])
+            row(f"fig8/copy/n={n}", t, f"GB/s={nb / t / 1e9:.2f}")
+    if "int8" in elems and "bf16" in elems:
+        row("fig9/int8_vs_fp16", 0.0,
+            f"int8_GElems/s={elems['int8']:.3f};fp16_GElems/s={elems['bf16']:.3f};"
+            f"ratio={elems['int8'] / max(elems['bf16'], 1e-9):.2f}x")
+
+
+def fig10_compress(lens):
+    """Paper Fig. 10: compress (scan-based) vs baseline masked-select."""
+    for n in lens:
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+        m = jnp.asarray(rng.random(n) < 0.5)
+        ours = jax.jit(lambda a, f: compress(a, f)[0])
+        base = jax.jit(lambda a, f: jnp.where(
+            jnp.cumsum(f) * 0 + f, a, 0.0))   # masked zeroing (no compaction)
+        base2 = jax.jit(lambda a, f: a[jnp.nonzero(f, size=n)[0]])
+        t_ours = timeit(ours, x, m)
+        t_nz = timeit(base2, x, m)
+        row(f"fig10/compress/n={n}", t_ours,
+            f"GB/s={8 * n / t_ours / 1e9:.2f};baseline_nonzero_us={t_nz * 1e6:.1f}")
+
+
+def fig11_radix_sort(lens):
+    """Paper Fig. 11: fp16 radix sort (scan splits) vs jnp.sort baseline."""
+    for n in lens:
+        x = jnp.asarray(np.random.default_rng(3).standard_normal(n), jnp.float16)
+        t_ours = timeit(jax.jit(lambda a: radix_sort(a)[0]), x)
+        t_base = timeit(jax.jit(lambda a: jnp.sort(a)), x)
+        row(f"fig11/radix_sort/n={n}", t_ours,
+            f"baseline_us={t_base * 1e6:.1f};ratio={t_base / t_ours:.2f}x")
+
+
+def fig12_batched_bandwidth():
+    """Paper Fig. 12: batched scan bandwidth vs batch size (len 65K)."""
+    n = 65536
+    for batch in (1, 4, 16, 64):
+        x = jnp.asarray(np.random.default_rng(4).standard_normal((batch, n)),
+                        jnp.float32)
+        for s in (16, 32, 64, 128):
+            t = timeit(jax.jit(functools.partial(
+                scan, method="matmul", variant="scanu", tile_s=s)), x)
+            row(f"fig12/batched/b={batch}/s={s}", t,
+                f"GB/s={8 * batch * n / t / 1e9:.2f}")
+
+
+def fig13_top_p(quick=True):
+    """Paper Fig. 13: llama3-style top-p sampling, baseline vs scan-based."""
+    vocab = 32768 if quick else 131072
+    for batch in (1, 4, 16):
+        logits = jnp.asarray(
+            np.random.default_rng(5).standard_normal((batch, vocab)) * 3,
+            jnp.float32)
+        key = jax.random.PRNGKey(0)
+        ours = jax.jit(lambda l, k: top_p_sample(l, k, p=0.9,
+                                                 sort_method="radix"))
+        base = jax.jit(lambda l, k: top_p_sample(l, k, p=0.9,
+                                                 sort_method="xla"))
+        t_ours = timeit(ours, logits, key, repeats=3, warmup=1)
+        t_base = timeit(base, logits, key, repeats=3, warmup=1)
+        row(f"fig13/top_p/b={batch}/v={vocab}", t_ours,
+            f"baseline_us={t_base * 1e6:.1f};scans_per_batch=17")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="larger sizes")
+    ap.add_argument("--only", default=None,
+                    help="comma list of fig ids, e.g. fig3,fig11")
+    args = ap.parse_args()
+    lens = FULL_LENS if args.full else QUICK_LENS
+    sections = {
+        "fig3": lambda: fig3_single_scan(lens),
+        "fig5": fig5_batched_ratio,
+        "fig8": lambda: fig8_fig9_mcscan(lens),
+        "fig10": lambda: fig10_compress(lens[:2]),
+        "fig11": lambda: fig11_radix_sort(lens[:2]),
+        "fig12": fig12_batched_bandwidth,
+        "fig13": lambda: fig13_top_p(quick=not args.full),
+    }
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    for name, fn in sections.items():
+        if only and name not in only:
+            continue
+        fn()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""The paper's operator zoo on realistic AI-workload shapes: MoE dispatch offsets
+via int8 mask scan, radix-sort-based top-k, weighted sampling, compress.
+
+    PYTHONPATH=src python examples/scan_operators.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import scan, split, compress, radix_sort, topk, weighted_sample
+
+rng = np.random.default_rng(0)
+
+# --- MoE dispatch: position-in-expert = exclusive int8 mask scan (paper Fig. 9) ---
+T, E = 8192, 64
+expert_of = jnp.asarray(rng.integers(0, E, T), jnp.int32)
+onehot = (expert_of[:, None] == jnp.arange(E)[None, :]).astype(jnp.int8)
+pos_in_expert = scan(onehot, axis=0, exclusive=True)          # int32, on the MXU
+my_pos = jnp.take_along_axis(pos_in_expert, expert_of[:, None], 1)[:, 0]
+print("MoE dispatch: max position-in-expert =", int(my_pos.max()),
+      "(~T/E =", T // E, ")")
+
+# --- token filtering (compress == masked_select) ---
+scores = jnp.asarray(rng.standard_normal(T), jnp.float32)
+kept, n = compress(scores, scores > 1.0)
+print(f"compress: kept {int(n)}/{T} tokens above threshold")
+
+# --- vocabulary top-k via descending radix sort (fp16 => 16 scan passes) ---
+logits = jnp.asarray(rng.standard_normal(4096), jnp.float16)
+v, i = topk(logits, 8)
+print("top-8 logits:", np.asarray(v))
+
+# --- weighted sampling by inverse transform on the scanned CDF ---
+w = jnp.asarray(rng.random(100_000), jnp.float32)
+keys = jax.random.split(jax.random.PRNGKey(0), 8)
+samples = jax.vmap(lambda k: weighted_sample(w, k))(keys)
+print("weighted samples (support 100k):", np.asarray(samples))
+
+# --- stable split keeps relative order (the radix-sort building block) ---
+x = jnp.arange(10, dtype=jnp.float32)
+z, ind, nt = split(x, x % 3 == 0)
+print("split([0..9], %3==0):", np.asarray(z).astype(int), "n_true =", int(nt))

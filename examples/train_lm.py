@@ -1,0 +1,66 @@
+"""End-to-end training driver: train an LM on synthetic structured data with
+checkpointing + resume, then generate from it with the scan-based sampler.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200          # ~10M params
+    PYTHONPATH=src python examples/train_lm.py --size 100m --steps 300   # real box
+
+Re-running the same command resumes from the latest checkpoint (restart-safe
+pipeline) — kill it mid-run to see fault tolerance in action.
+"""
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import SyntheticLM
+from repro.models.model import build_model
+from repro.serving.engine import ServeEngine
+from repro.training.optimizer import AdamWConfig
+from repro.training.trainer import Trainer
+
+
+def make_cfg(size: str) -> ModelConfig:
+    if size == "100m":
+        return ModelConfig(name="lm-100m", family="decoder", n_layers=12,
+                           d_model=768, n_heads=12, n_kv_heads=4, d_ff=2048,
+                           vocab_size=4096, dtype="float32", remat=False)
+    return ModelConfig(name="lm-10m", family="decoder", n_layers=8,
+                       d_model=256, n_heads=8, n_kv_heads=4, d_ff=1024,
+                       vocab_size=1024, dtype="float32", remat=False)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", choices=["10m", "100m"], default="10m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = make_cfg(args.size)
+    model = build_model(cfg)
+    n = sum(x.size for x in jax.tree.leaves(
+        jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))))
+    print(f"[example] {cfg.name}: {n / 1e6:.1f}M params")
+
+    src = SyntheticLM(cfg.vocab_size, args.seq, args.batch, seed=0)
+    tr = Trainer(cfg, AdamWConfig(lr=1e-3, warmup_steps=20,
+                                  total_steps=args.steps),
+                 ckpt_dir=args.ckpt_dir)
+    out = tr.fit(src, args.steps, log_every=20, ckpt_every=50)
+    print(f"[example] loss {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f}")
+
+    eng = ServeEngine(cfg, out["state"]["params"], max_len=args.seq + 32,
+                      top_p=0.9, sampler="topp_scan")
+    prompt = src.batch_at(10_000)["tokens"][:2, :16]
+    gen = eng.generate({"tokens": jax.numpy.asarray(prompt)}, 16,
+                       jax.random.PRNGKey(1))
+    print("[example] prompt tail :", prompt[:, -6:])
+    print("[example] generation  :", np.asarray(gen)[:, :12])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""Per-op collective attribution for one dry-run cell: top collective ops grouped by
+(kind, shape), with counts and wire bytes — the profile used by §Perf hillclimbs.
+
+  PYTHONPATH=src python -m repro.analysis.collectives --arch gemma2-2b \
+      --shape train_4k [--mesh single]
+"""
+import argparse
+import collections
+import re
+
+from repro.analysis.roofline import _OP_RE, _SHAPE_RE, _GROUPS_RE, \
+    _GROUPS_IOTA_RE, _shape_bytes, parse_collectives
+from repro.launch.dryrun import lower_cell
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--debug-mesh", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+    mesh_fn = make_debug_mesh if args.debug_mesh else make_production_mesh
+    mesh = mesh_fn(multi_pod=args.mesh == "multi")
+    lowered, chips, _ = lower_cell(args.arch, args.shape, mesh)
+    compiled = lowered.compile()
+    txt = compiled.as_text()
+
+    groups = collections.defaultdict(lambda: [0, 0.0])
+    for line in txt.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        tuple_part, dtype, dims, kind = m.groups()
+        shape = f"({tuple_part.strip()[:60]})" if tuple_part else f"{dtype}[{dims}]"
+        recs = parse_collectives(line)
+        wire = recs[0]["wire_bytes"] if recs else 0.0
+        g = groups[(kind, shape)]
+        g[0] += 1
+        g[1] += wire
+    total = sum(v[1] for v in groups.values())
+    print(f"{args.arch} × {args.shape} × {args.mesh}: "
+          f"{sum(v[0] for v in groups.values())} collectives, "
+          f"{total / 1e9:.1f} GB wire/chip")
+    rows = sorted(groups.items(), key=lambda kv: -kv[1][1])[:args.top]
+    for (kind, shape), (n, wire) in rows:
+        print(f"  {wire / 1e9:9.2f} GB  n={n:4d}  {kind:<20} {shape}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,145 @@
+"""Three-term roofline analysis from compiled dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+TPU v5e per-chip constants (the TARGET hardware; this container only compiles):
+  peak bf16 compute 197 TFLOP/s · HBM 819 GB/s · ICI ~50 GB/s/link.
+
+``cost_analysis()`` on the post-SPMD module is *per chip*; so
+  compute  = flops / PEAK_FLOPS
+  memory   = bytes_accessed / HBM_BW
+  collective = effective wire bytes per chip / ICI_BW
+equivalently HLO_global/(chips·peak) as in the assignment formulas.
+
+Collective bytes come from parsing the post-SPMD HLO: every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute op's
+operand size (derived from the printed result shape and replica-group size), scaled
+by the ring-traffic factor of the op kind.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-gather.3 = f32[64,64]{0,1} all-gather(%x), ... replica_groups={{0,1},..}
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str) -> List[Dict]:
+    """Per-collective: kind, result bytes (local), group size, wire bytes/chip."""
+    out = []
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        tuple_part, dtype, dims, kind = m.group(1), m.group(2), m.group(3), m.group(4)
+        if tuple_part:                       # tuple result: sum components
+            rbytes = sum(_shape_bytes(d, s)
+                         for d, s in _SHAPE_RE.findall(tuple_part))
+        else:
+            rbytes = _shape_bytes(dtype, dims)
+        g = 1
+        mg = _GROUPS_RE.search(line)
+        if mg:
+            g = len(mg.group(1).split(","))
+        else:
+            mg2 = _GROUPS_IOTA_RE.search(line)
+            if mg2:
+                g = int(mg2.group(2))
+        # effective wire bytes per chip (ring algorithms)
+        if kind == "all-gather":
+            wire = rbytes * (g - 1) / max(g, 1)
+            operand = rbytes                      # gathered result
+        elif kind == "all-reduce":
+            wire = 2 * rbytes * (g - 1) / max(g, 1)
+            operand = rbytes
+        elif kind == "reduce-scatter":
+            operand = rbytes * g                  # input is g× the output
+            wire = rbytes * (g - 1)               # (g-1)/g of the input
+        elif kind == "all-to-all":
+            operand = rbytes
+            wire = rbytes * (g - 1) / max(g, 1)
+        else:                                     # collective-permute
+            operand = rbytes
+            wire = rbytes
+        out.append({"kind": kind, "result_bytes": rbytes, "group": g,
+                    "operand_bytes": operand, "wire_bytes": wire})
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float      # operand bytes per chip
+    wire_bytes: float            # effective ring-traffic bytes per chip
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    n_collectives: int
+    by_kind: Dict[str, float]
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze(compiled, *, chips: int = 1) -> Roofline:
+    cost = compiled.cost_analysis()
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    colls = parse_collectives(compiled.as_text())
+    cbytes = sum(c["operand_bytes"] for c in colls)
+    wire = sum(c["wire_bytes"] for c in colls)
+    by_kind: Dict[str, float] = {}
+    for c in colls:
+        by_kind[c["kind"]] = by_kind.get(c["kind"], 0.0) + c["wire_bytes"]
+    terms = {
+        "compute": flops / PEAK_FLOPS,
+        "memory": hbm / HBM_BW,
+        "collective": wire / ICI_BW,
+    }
+    bottleneck = max(terms, key=terms.get)
+    return Roofline(
+        flops=flops, hbm_bytes=hbm, collective_bytes=cbytes, wire_bytes=wire,
+        compute_s=terms["compute"], memory_s=terms["memory"],
+        collective_s=terms["collective"], bottleneck=bottleneck,
+        n_collectives=len(colls), by_kind=by_kind,
+    )
+
+
+def model_flops(n_params: int, tokens: int, kind: str,
+                n_active: Optional[int] = None) -> float:
+    """MODEL_FLOPS: 6·N·D for training, 2·N_active·D for inference decode/prefill."""
+    n = n_active if n_active is not None else n_params
+    if kind == "train":
+        return 6.0 * n_params * tokens if n_active is None else 6.0 * n * tokens
+    return 2.0 * n * tokens

@@ -1,0 +1,128 @@
+"""Config system: ModelConfig dataclass + the assigned input-shape registry."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0
+    first_k_dense: int = 0          # leading dense layers (deepseek-moe)
+    capacity_factor: float = 1.25
+    router_scale: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int
+    kv_lora_rank: int
+    qk_nope_head_dim: int
+    qk_rope_head_dim: int
+    v_head_dim: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int
+    n_heads: int                    # SSM heads (d_inner / head_dim)
+    head_dim: int
+    expand: int = 2
+    conv_kernel: int = 4
+    chunk: int = 128
+    n_groups: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    slstm_every: int = 4            # every k-th block is sLSTM, rest mLSTM
+    n_heads: int = 4
+    proj_factor: float = 2.0        # mLSTM up-projection
+    conv_kernel: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # decoder | encdec | moe | hybrid | xlstm | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    # attention options
+    qk_norm: bool = False
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    local_window: Optional[int] = None       # sliding-window size for local layers
+    layer_pattern: Optional[Tuple[str, ...]] = None  # e.g. ("local","global") cycle
+    rope_theta: float = 10000.0
+    rope: bool = True
+    tie_embeddings: bool = False
+    act: str = "silu"               # mlp activation
+    norm_eps: float = 1e-6
+    scale_embed: bool = False       # gemma-style sqrt(d) embedding scale
+    # submodel configs
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    # hybrid (zamba2): shared attention block every k ssm layers
+    shared_attn_interval: Optional[int] = None
+    # enc-dec (whisper)
+    n_enc_layers: int = 0
+    enc_len: int = 1500             # audio frames after conv frontend (stub)
+    # vlm (paligemma)
+    n_img_tokens: int = 0           # patch embeddings prepended (stub frontend)
+    # training / numerics
+    dtype: str = "bfloat16"
+    remat: bool = True
+    scan_layers: bool = True
+    scan_method: str = "matmul"     # the paper's technique toggle ("vector" baseline)
+    # shapes this arch supports (skips documented in DESIGN.md §4)
+    supports_long: bool = False
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding-table rows padded to a multiple of 256 so the vocab axis
+        shards evenly over any model-parallel degree ≤ 256 (padded logits are
+        masked to -inf — see TransformerLM._logits)."""
+        return ((self.vocab_size + 255) // 256) * 256
+
+    def param_count(self) -> int:
+        """Total parameters (for MODEL_FLOPS roofline)."""
+        from repro.models.model import build_model
+        import jax
+        m = build_model(self)
+        p = jax.eval_shape(lambda: m.init(jax.random.PRNGKey(0)))
+        return sum(int(jnp.prod(jnp.array(l.shape))) for l in jax.tree.leaves(p))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+# smoke-test (reduced) shape
+SMOKE_SHAPE = ShapeConfig("smoke", 64, 2, "train")

@@ -1,0 +1,14 @@
+"""llama3-8b [dense]: GQA, 128k vocab. [arXiv:2407.21783; unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-8b", family="decoder",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=14336, vocab_size=128256, rope_theta=500000.0,
+)
+
+SMOKE = ModelConfig(
+    name="llama3-8b-smoke", family="decoder",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=256, rope_theta=500000.0, dtype="float32", remat=False,
+)

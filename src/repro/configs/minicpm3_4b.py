@@ -1,0 +1,20 @@
+"""minicpm3-4b [dense]: multi-head latent attention (MLA) with compressed KV cache
+and absorbed-matrix decode. [hf:openbmb/MiniCPM3-4B; hf]"""
+from repro.configs.base import MLAConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm3-4b", family="decoder",
+    n_layers=62, d_model=2560, n_heads=40, n_kv_heads=40,
+    d_ff=6400, vocab_size=73448, head_dim=64,
+    mla=MLAConfig(q_lora_rank=768, kv_lora_rank=256,
+                  qk_nope_head_dim=64, qk_rope_head_dim=32, v_head_dim=64),
+)
+
+SMOKE = ModelConfig(
+    name="minicpm3-4b-smoke", family="decoder",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=128, vocab_size=256, head_dim=16,
+    mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16,
+                  qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16),
+    dtype="float32", remat=False,
+)

@@ -1,0 +1,10 @@
+"""Core — the paper's contribution: matmul-based parallel scan + scan-based operators."""
+from repro.core.scan import (
+    scan, cumsum, tile_scan_scanu, tile_scan_scanul1, upper_ones,
+    strictly_lower_ones, accum_dtype_for,
+)
+from repro.core.distributed import mcscan, mcscan_local
+from repro.core.primitives import (
+    split, compress, radix_sort, sort, topk, top_p_sample, weighted_sample,
+)
+from repro.core.ssd import ssd_scan, ssd_scan_ref, mlstm_chunked, mlstm_ref

@@ -1,0 +1,225 @@
+"""Scan-based operators (paper §5): split, compress, radix sort, top-k, top-p,
+weighted sampling.
+
+All of them bottom out in ``repro.core.scan.scan`` — pass ``method=`` through to pick
+the paper's matmul scan (default), the vector baseline, or the Pallas kernel.
+
+Shapes are static (JAX): operators that logically return a variable number of elements
+(compress/split) return a full-size array plus a count, with the tail filled.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scan import scan
+
+__all__ = [
+    "split", "compress", "radix_sort", "sort", "topk", "top_p_sample",
+    "weighted_sample", "float_to_sortable_int", "sortable_int_to_float",
+]
+
+
+# ---------------------------------------------------------------------------
+# split / compress
+# ---------------------------------------------------------------------------
+
+
+def split(x: jax.Array, flags: jax.Array, *, method: str = "matmul",
+          return_indices: bool = True):
+    """Stable partition (paper's SplitInd): flagged elements first, order preserved.
+
+    Returns ``(z, indices, n_true)``.  ``indices[j]`` is the original position of
+    ``z[j]``.  The destination offsets come from an exclusive scan of the int8 mask —
+    the paper's int8 -> int32 cube-unit mask-scan specialization.
+    """
+    n = x.shape[-1]
+    f32m = flags.astype(jnp.int8)
+    ex = scan(f32m, axis=-1, exclusive=True, method=method)      # int32 positions
+    fl = flags.astype(jnp.int32)
+    n_true = ex[..., -1] + fl[..., -1]
+    iota = jnp.arange(n, dtype=jnp.int32)
+    pos_false = iota - ex                                        # falses before i
+    dest = jnp.where(flags, ex, n_true[..., None] + pos_false)
+
+    def scatter_1d(dest1, x1):
+        z = jnp.zeros_like(x1).at[dest1].set(x1)
+        ind = jnp.zeros((n,), jnp.int32).at[dest1].set(iota)
+        return z, ind
+
+    batch = x.shape[:-1]
+    if batch:
+        flat_dest = dest.reshape(-1, n)
+        flat_x = x.reshape(-1, n)
+        z, ind = jax.vmap(scatter_1d)(flat_dest, flat_x)
+        z = z.reshape(*batch, n)
+        ind = ind.reshape(*batch, n)
+    else:
+        z, ind = scatter_1d(dest, x)
+    if return_indices:
+        return z, ind, n_true
+    return z, n_true
+
+
+def compress(x: jax.Array, mask: jax.Array, *, method: str = "matmul",
+             fill_value=0) -> Tuple[jax.Array, jax.Array]:
+    """``masked_select``: gather elements where ``mask`` is true, packed left.
+
+    Returns ``(values, count)``; ``values[count:]`` is ``fill_value``.
+    """
+    z, _, n_true = split(x, mask, method=method)
+    iota = jnp.arange(x.shape[-1], dtype=jnp.int32)
+    keep = iota < n_true[..., None]
+    z = jnp.where(keep, z, jnp.asarray(fill_value, z.dtype))
+    return z, n_true
+
+
+# ---------------------------------------------------------------------------
+# Radix sort (paper §5, LSB; fp16/fp32 via order-preserving bit encodings)
+# ---------------------------------------------------------------------------
+
+
+def float_to_sortable_int(x: jax.Array) -> jax.Array:
+    """Order-preserving float -> unsigned encoding (paper's pre-processing phase).
+
+    Positive floats: flip the MSB.  Negative floats: flip all bits.
+    """
+    if x.dtype == jnp.float16:
+        u = jax.lax.bitcast_convert_type(x, jnp.uint16)
+        sign = (u >> 15).astype(jnp.bool_)
+        return jnp.where(sign, ~u, u | jnp.uint16(0x8000))
+    if x.dtype == jnp.float32:
+        u = jax.lax.bitcast_convert_type(x, jnp.uint32)
+        sign = (u >> 31).astype(jnp.bool_)
+        return jnp.where(sign, ~u, u | jnp.uint32(0x80000000))
+    if x.dtype == jnp.bfloat16:
+        u = jax.lax.bitcast_convert_type(x, jnp.uint16)
+        sign = (u >> 15).astype(jnp.bool_)
+        return jnp.where(sign, ~u, u | jnp.uint16(0x8000))
+    raise TypeError(f"unsupported float dtype {x.dtype}")
+
+
+def sortable_int_to_float(u: jax.Array, dtype) -> jax.Array:
+    """Inverse of :func:`float_to_sortable_int` (paper's post-processing phase)."""
+    dtype = jnp.dtype(dtype)
+    if dtype in (jnp.dtype(jnp.float16), jnp.dtype(jnp.bfloat16)):
+        msb = jnp.uint16(0x8000)
+        pos = (u & msb).astype(jnp.bool_)
+        dec = jnp.where(pos, u & ~msb, ~u)
+        return jax.lax.bitcast_convert_type(dec, dtype)
+    if dtype == jnp.dtype(jnp.float32):
+        msb = jnp.uint32(0x80000000)
+        pos = (u & msb).astype(jnp.bool_)
+        dec = jnp.where(pos, u & ~msb, ~u)
+        return jax.lax.bitcast_convert_type(dec, dtype)
+    raise TypeError(f"unsupported float dtype {dtype}")
+
+
+def _encode_for_sort(x: jax.Array) -> Tuple[jax.Array, int, callable]:
+    dt = x.dtype
+    if jnp.issubdtype(dt, jnp.floating):
+        enc = float_to_sortable_int(x)
+        bits = enc.dtype.itemsize * 8
+        return enc, bits, lambda u: sortable_int_to_float(u, dt)
+    if dt in (jnp.dtype(jnp.int16), jnp.dtype(jnp.int32)):
+        udt = jnp.uint16 if dt == jnp.dtype(jnp.int16) else jnp.uint32
+        bias = jnp.asarray(1 << (jnp.dtype(udt).itemsize * 8 - 1), udt)
+        enc = jax.lax.bitcast_convert_type(x, udt) ^ bias
+        bits = jnp.dtype(udt).itemsize * 8
+        return enc, bits, lambda u: jax.lax.bitcast_convert_type(u ^ bias, dt)
+    if dt in (jnp.dtype(jnp.uint16), jnp.dtype(jnp.uint32), jnp.dtype(jnp.uint8),
+              jnp.dtype(jnp.int8)):
+        if dt == jnp.dtype(jnp.int8):
+            enc = (x.astype(jnp.int32) + 128).astype(jnp.uint8)
+            return enc, 8, lambda u: (u.astype(jnp.int32) - 128).astype(jnp.int8)
+        bits = dt.itemsize * 8
+        return x, bits, lambda u: u
+    raise TypeError(f"radix sort: unsupported dtype {dt}")
+
+
+def radix_sort(x: jax.Array, *, descending: bool = False, method: str = "matmul",
+               return_indices: bool = True):
+    """Stable LSB radix sort built on scan-based splits (paper §5).
+
+    One split per bit (16 for fp16, 32 for fp32), each using the int8 mask scan.
+    """
+    enc, bits, decode = _encode_for_sort(x)
+    if descending:
+        enc = ~enc  # complement keeps stability while reversing the order
+    n = x.shape[-1]
+    perm = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), x.shape).astype(jnp.int32)
+    work = enc
+    one = jnp.asarray(1, enc.dtype)
+    for b in range(bits):
+        bit = (work >> b) & one
+        flags = bit == 0                     # zeros first (LSB ascending pass)
+        work, ind, _ = split(work, flags, method=method)
+        perm = jnp.take_along_axis(perm, ind, axis=-1)
+    if descending:
+        work = ~work
+    values = decode(work)
+    if return_indices:
+        return values, perm
+    return values
+
+
+def sort(x: jax.Array, *, descending: bool = False, method: str = "matmul"):
+    """PyTorch-style ``sort`` returning (values, indices); radix under the hood."""
+    return radix_sort(x, descending=descending, method=method, return_indices=True)
+
+
+# ---------------------------------------------------------------------------
+# top-k / top-p / weighted sampling
+# ---------------------------------------------------------------------------
+
+
+def topk(x: jax.Array, k: int, *, method: str = "matmul"):
+    """Top-k via descending radix sort (paper §5 implements it over SplitInd)."""
+    values, idx = radix_sort(x, descending=True, method=method)
+    return values[..., :k], idx[..., :k]
+
+
+def weighted_sample(w: jax.Array, key: jax.Array, *, method: str = "matmul",
+                    cdf: Optional[jax.Array] = None) -> jax.Array:
+    """Inverse-transform sampling on the scanned CDF (paper §5).
+
+    The paper invokes SplitInd with predicate ``scan(w) > θ·Σw`` and reads the last
+    output index; counting ``scan(w) <= θ`` is the same index computed with the same
+    scan, without the extra data movement.
+    """
+    if cdf is None:
+        cdf = scan(w, axis=-1, method=method)
+    total = cdf[..., -1:]
+    theta = jax.random.uniform(key, w.shape[:-1] + (1,), dtype=cdf.dtype) * total
+    idx = jnp.sum((cdf < theta).astype(jnp.int32), axis=-1)
+    return jnp.clip(idx, 0, w.shape[-1] - 1)
+
+
+def top_p_sample(logits: jax.Array, key: jax.Array, p: float = 0.9,
+                 temperature: float = 1.0, *, method: str = "matmul",
+                 sort_method: str = "radix") -> jax.Array:
+    """Nucleus sampling exactly as in the paper's Llama3 case study (§5, §6.5).
+
+    sort (radix, scan-based) -> prefix-sum of sorted probabilities -> mask tokens
+    whose *preceding* cumulative mass exceeds ``p`` -> renormalise -> weighted sample.
+    With fp16-style 16-bit keys this is the paper's "17 scans per batch row" operator.
+    """
+    if temperature != 1.0:
+        logits = logits / temperature
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    if sort_method == "radix":
+        # Sort on bf16-rounded keys (16 bits = 16 splits, as in the paper's fp16
+        # evaluation); ties/rounding only reorder within ~3-ulp probability bands.
+        keys16 = probs.astype(jnp.bfloat16)
+        _, order = radix_sort(keys16, descending=True, method=method)
+    else:
+        order = jnp.argsort(-probs, axis=-1)
+    sorted_p = jnp.take_along_axis(probs, order, axis=-1)
+    cum = scan(sorted_p, axis=-1, method=method)
+    cut = (cum - sorted_p) > p                    # llama3's sample_top_p formula
+    masked = jnp.where(cut, 0.0, sorted_p)
+    j = weighted_sample(masked, key, method=method)
+    return jnp.take_along_axis(order, j[..., None], axis=-1)[..., 0]

@@ -1,0 +1,225 @@
+"""Matmul-based parallel scan (prefix sum) — the paper's core contribution.
+
+Implements, in pure JAX (lowering to the TPU MXU via ``jnp.dot``):
+
+* ``ScanU``   (paper Alg. 1): one matmul ``A @ U_s`` computes ``s`` local scans of
+  length ``s``; the row partials are then propagated.  On Ascend the propagation is a
+  serial vector-core loop; on TPU we use a log-depth VPU cumsum over the ``s`` row sums
+  (see DESIGN.md §2, "assumptions that changed").
+* ``ScanUL1`` (paper Alg. 2 / Eq. 1): the full ``ℓ = s²`` tile scan as matmuls only::
+
+      scan(z) = A @ U_s  +  L⁻_s @ A @ 1_s
+
+  where ``A`` is the row-major ``s×s`` view of the tile, ``U_s`` the upper-triangular
+  all-ones matrix (incl. diagonal) and ``L⁻_s`` the *strictly* lower-triangular
+  all-ones matrix.
+* A multi-level block scan (SSA structure, paper §2.1/§4.3) so arbitrary lengths run
+  in linear work: tile-local scans (MXU) + a scan over the tile sums + broadcast add.
+
+dtype rules follow the paper's cube unit: ``int8 -> int32`` accumulation (mask scans),
+``bf16/f16 -> f32`` accumulation, everything else accumulates in its own dtype.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "scan",
+    "cumsum",
+    "tile_scan_scanu",
+    "tile_scan_scanul1",
+    "upper_ones",
+    "strictly_lower_ones",
+    "accum_dtype_for",
+]
+
+# ---------------------------------------------------------------------------
+# Constant matrices (paper notation: U_s, L_s, L⁻_s, 1_s)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _np_upper_ones(s: int) -> np.ndarray:
+    return np.triu(np.ones((s, s), dtype=np.float32))
+
+
+@functools.lru_cache(maxsize=None)
+def _np_strictly_lower_ones(s: int) -> np.ndarray:
+    return np.tril(np.ones((s, s), dtype=np.float32), k=-1)
+
+
+def upper_ones(s: int, dtype=jnp.float32) -> jax.Array:
+    """U_s — upper triangular all-ones (including the main diagonal)."""
+    return jnp.asarray(_np_upper_ones(s), dtype=dtype)
+
+
+def strictly_lower_ones(s: int, dtype=jnp.float32) -> jax.Array:
+    """L⁻_s — strictly lower triangular all-ones (zero diagonal)."""
+    return jnp.asarray(_np_strictly_lower_ones(s), dtype=dtype)
+
+
+def accum_dtype_for(dtype) -> jnp.dtype:
+    """Accumulation dtype mirroring the Ascend cube unit I/O types.
+
+    int8 inputs accumulate in int32 (the paper's mask-scan specialization);
+    sub-fp32 floats accumulate in fp32 (cube f16 -> f32).
+    """
+    dtype = jnp.dtype(dtype)
+    if dtype in (jnp.dtype(jnp.int8), jnp.dtype(jnp.uint8), jnp.dtype(jnp.int16),
+                 jnp.dtype(jnp.bool_)):
+        return jnp.dtype(jnp.int32)
+    if dtype in (jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16)):
+        return jnp.dtype(jnp.float32)
+    return dtype
+
+
+# ---------------------------------------------------------------------------
+# Tile-local scans (one ℓ = s² tile viewed as an s×s row-major matrix A)
+# ---------------------------------------------------------------------------
+
+
+def tile_scan_scanu(a: jax.Array, *, accum_dtype=None) -> jax.Array:
+    """ScanU tile step: ``A @ U_s`` + propagation of row partials.
+
+    ``a``: (..., s, s) row-major tiles.  Returns the *full* tile scan (the matmul
+    computes the s per-row local scans; propagation adds the exclusive cumsum of the
+    row sums — on TPU a log-depth VPU op rather than Ascend's serial vector loop).
+    """
+    s = a.shape[-1]
+    acc = accum_dtype or accum_dtype_for(a.dtype)
+    u = upper_ones(s, _operand_dtype(a.dtype))
+    local = jnp.matmul(a, u, preferred_element_type=acc).astype(acc)
+    row_sums = local[..., :, -1]
+    row_prefix = jnp.cumsum(row_sums, axis=-1, dtype=acc) - row_sums  # exclusive
+    return local + row_prefix[..., :, None]
+
+
+def tile_scan_scanul1(a: jax.Array, *, accum_dtype=None) -> jax.Array:
+    """ScanUL1 tile step (paper Eq. 1): ``A@U + L⁻ @ (A@1)`` — matmuls only.
+
+    ``A @ 1_s`` is computed as a row-sum broadcast (identical result, avoids one
+    explicit matmul operand load); the ``L⁻`` product runs on the MXU and plays the
+    role of the cube accumulation-buffer step (Alg. 2 line 12).
+    """
+    s = a.shape[-1]
+    acc = accum_dtype or accum_dtype_for(a.dtype)
+    od = _operand_dtype(a.dtype)
+    u = upper_ones(s, od)
+    lm = strictly_lower_ones(s, od)
+    c2 = jnp.matmul(a, u, preferred_element_type=acc).astype(acc)
+    # C1 = A @ 1_s  ==  row sums broadcast along columns.
+    c1 = jnp.sum(a.astype(acc), axis=-1, keepdims=True) * jnp.ones((1, s), acc)
+    c2 = c2 + jnp.matmul(lm.astype(acc), c1, preferred_element_type=acc)
+    return c2
+
+
+def _operand_dtype(dtype) -> jnp.dtype:
+    """dtype in which the constant matrices / matmul operands are fed to the MXU."""
+    dtype = jnp.dtype(dtype)
+    if dtype in (jnp.dtype(jnp.int8), jnp.dtype(jnp.bool_), jnp.dtype(jnp.uint8)):
+        return jnp.dtype(jnp.int8)
+    if dtype in (jnp.dtype(jnp.int16), jnp.dtype(jnp.int32)):
+        return dtype
+    if dtype == jnp.dtype(jnp.bfloat16):
+        return dtype
+    if dtype == jnp.dtype(jnp.float16):
+        return dtype
+    return jnp.dtype(jnp.float32)
+
+
+_TILE_FNS = {"scanu": tile_scan_scanu, "scanul1": tile_scan_scanul1}
+
+
+# ---------------------------------------------------------------------------
+# Full scan over the last axis
+# ---------------------------------------------------------------------------
+
+
+def _scan_last_axis_matmul(x: jax.Array, s: int, variant: str, acc) -> jax.Array:
+    """Multi-level SSA block scan over the last axis using matmul tile scans."""
+    *lead, n = x.shape
+    ell = s * s
+    if n <= s:
+        # Single row: one triangular matvec on the MXU.
+        u = upper_ones(n, _operand_dtype(x.dtype)) if n > 1 else None
+        if n == 1:
+            return x.astype(acc)
+        return jnp.matmul(x[..., None, :].astype(_operand_dtype(x.dtype)), u,
+                          preferred_element_type=acc)[..., 0, :].astype(acc)
+
+    n_pad = (-n) % ell
+    xp = jnp.pad(x, [(0, 0)] * len(lead) + [(0, n_pad)]) if n_pad else x
+    nt = xp.shape[-1] // ell
+    tiles = xp.reshape(*lead, nt, s, s)
+    local = _TILE_FNS[variant](tiles, accum_dtype=acc)          # (..., nt, s, s)
+    tile_sums = local[..., -1, -1]                              # (..., nt)
+    # Scan over the (much smaller) tile sums; recurse with the matmul method when the
+    # tile-sum array itself is long enough to benefit.
+    if nt > ell:
+        tile_prefix = _scan_last_axis_matmul(tile_sums, s, variant, acc)
+    else:
+        tile_prefix = jnp.cumsum(tile_sums, axis=-1, dtype=acc)
+    tile_prefix = tile_prefix - tile_sums                       # exclusive
+    out = local + tile_prefix[..., None, None]
+    out = out.reshape(*lead, nt * ell)
+    return out[..., :n] if n_pad else out
+
+
+def scan(
+    x: jax.Array,
+    axis: int = -1,
+    *,
+    exclusive: bool = False,
+    reverse: bool = False,
+    method: str = "matmul",
+    variant: str = "scanul1",
+    tile_s: int = 128,
+    accum_dtype: Optional[jnp.dtype] = None,
+) -> jax.Array:
+    """Inclusive (or exclusive) prefix sum along ``axis``.
+
+    method:
+      * ``"matmul"`` — the paper's cube-unit algorithms (ScanU / ScanUL1 per
+        ``variant``) with SSA multi-level blocking.  This is the default and the
+        framework-wide cumsum used by MoE dispatch, sampling and the SSM layers.
+      * ``"vector"`` — plain ``jnp.cumsum`` (the paper's vector-only baseline).
+      * ``"kernel"`` — the fused Pallas TPU kernel (see ``repro.kernels``).
+    """
+    if method not in ("matmul", "vector", "kernel"):
+        raise ValueError(f"unknown scan method {method!r}")
+    if variant not in _TILE_FNS:
+        raise ValueError(f"unknown scan variant {variant!r}")
+    acc = jnp.dtype(accum_dtype) if accum_dtype is not None else accum_dtype_for(x.dtype)
+
+    axis = axis % x.ndim
+    if axis != x.ndim - 1:
+        x = jnp.moveaxis(x, axis, -1)
+    if reverse:
+        x = jnp.flip(x, axis=-1)
+
+    if method == "vector":
+        out = jnp.cumsum(x, axis=-1, dtype=acc)
+    elif method == "kernel":
+        from repro.kernels import ops as _kops  # local import to avoid cycle
+        out = _kops.scan_kernel(x, s=tile_s, variant=variant, accum_dtype=acc)
+    else:
+        out = _scan_last_axis_matmul(x, tile_s, variant, acc)
+
+    if exclusive:
+        pad = [(0, 0)] * (out.ndim - 1) + [(1, 0)]
+        out = jnp.pad(out, pad)[..., :-1]
+    if reverse:
+        out = jnp.flip(out, axis=-1)
+    if axis != x.ndim - 1:
+        out = jnp.moveaxis(out, -1, axis)
+    return out
+
+
+def cumsum(x: jax.Array, axis: int = -1, **kw) -> jax.Array:
+    """Drop-in ``jnp.cumsum`` replacement backed by the matmul scan."""
+    return scan(x, axis=axis, **kw)

@@ -1,0 +1,201 @@
+"""Chunked gated-linear-recurrence scan ("SSD") built on the paper's matmul-scan idea.
+
+The recurrence
+
+    h_t = exp(a_t) * h_{t-1} + B_t ⊗ x_t          h: (H, N, P)
+    y_t = C_t^T h_t                               y: (H, P)
+
+is an (associative, weighted) scan.  Exactly as the paper computes prefix sums with
+``A @ U_s`` tiles on the cube unit, we compute this scan chunkwise so that all the
+O(S·Q) work is dense matmuls on the MXU:
+
+  * within-chunk ("diagonal block"):   Y_d = (C B^T ∘ L) X     where
+    ``L[i,j] = exp(cs_i - cs_j)`` is the decay analogue of the paper's triangular
+    ``U_s`` / ``L⁻_s`` constant matrices (``cs`` = cumsum of ``a_t`` — itself computed
+    with the matmul scan);
+  * chunk states:                      S_c = (B ∘ decay-to-end)^T X
+  * across chunks: a length-``S/Q`` first-order scan (associative scan), the analogue
+    of the paper's block-sum scan in MCScan phase 2;
+  * off-diagonal correction:           Y_o = (C ∘ decay-from-start) H_in.
+
+Used by the Mamba2 blocks (zamba2) and the mLSTM blocks (xlstm).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scan import scan as mm_scan
+
+__all__ = ["ssd_scan", "ssd_scan_ref", "mlstm_chunked", "mlstm_ref"]
+
+
+def _chunk(x: jax.Array, q: int, axis: int = 1) -> jax.Array:
+    s = x.shape[axis]
+    assert s % q == 0, f"seq {s} not divisible by chunk {q}"
+    nc = s // q
+    new_shape = x.shape[:axis] + (nc, q) + x.shape[axis + 1:]
+    return x.reshape(new_shape)
+
+
+def ssd_scan(
+    x: jax.Array,        # (B, S, H, P)
+    a_log: jax.Array,    # (B, S, H)     log decay (<= 0 for stability)
+    b_mat: jax.Array,    # (B, S, H, N)
+    c_mat: jax.Array,    # (B, S, H, N)
+    *,
+    chunk: int = 128,
+    scan_method: str = "matmul",
+    initial_state: Optional[jax.Array] = None,   # (B, H, N, P)
+    return_final_state: bool = False,
+):
+    """Chunked SSD scan.  Returns y (B,S,H,P) [and final state (B,H,N,P)]."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    xc = _chunk(x, q)                                   # (B,nc,Q,H,P)
+    ac = jnp.moveaxis(_chunk(a_log, q), 3, 2)           # (B,nc,H,Q)
+    bc = _chunk(b_mat, q)                               # (B,nc,Q,H,N)
+    cc = _chunk(c_mat, q)
+
+    # cumsum of log-decays — with the paper's matmul scan (this is literally a
+    # prefix sum on the MXU).
+    cs = mm_scan(ac.astype(jnp.float32), axis=-1, method=scan_method)   # (B,nc,H,Q)
+
+    # Within-chunk decay matrix L[i,j] = exp(cs_i - cs_j), i >= j.  Mask BEFORE the
+    # exp: for i<j the difference is positive and can overflow, and inf in the dead
+    # branch of where() poisons the gradient (inf * 0 = NaN).
+    li = cs[..., :, None] - cs[..., None, :]            # (B,nc,H,Q,Q)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    lmat = jnp.exp(jnp.where(causal, li, -1e30))
+
+    scores = jnp.einsum("bnqhd,bnkhd->bnhqk", cc, bc)   # C_i · B_j
+    y_diag = jnp.einsum("bnhqk,bnhqk,bnkhp->bnqhp",
+                        scores.astype(jnp.float32), lmat,
+                        xc.astype(jnp.float32))
+
+    # Chunk states S_c = Σ_j exp(cs_last - cs_j) B_j ⊗ x_j.
+    decay_to_end = jnp.exp(cs[..., -1:] - cs)           # (B,nc,H,Q)
+    s_c = jnp.einsum("bnhq,bnqhd,bnqhp->bnhdp",
+                     decay_to_end, bc.astype(jnp.float32), xc.astype(jnp.float32))
+
+    # Across-chunk first-order scan (the MCScan phase-2 analogue).
+    d_c = jnp.exp(cs[..., -1])                          # (B,nc,H) total chunk decay
+
+    def combine(left, right):
+        dl, sl = left
+        dr, sr = right
+        return dl * dr, dr[..., None, None] * sl + sr
+
+    d_inc, s_inc = jax.lax.associative_scan(combine, (d_c, s_c), axis=1)
+    # State entering chunk c = inclusive state after chunk c-1 (shift right).
+    h_in = jnp.pad(s_inc, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    if initial_state is not None:
+        init = initial_state.astype(jnp.float32)
+        # prepend: h_in_c += (prod decays up to chunk c-1) * init
+        d_exc = jnp.pad(d_inc, ((0, 0), (1, 0), (0, 0)), constant_values=1.0)[:, :-1]
+        h_in = h_in + d_exc[..., None, None] * init[:, None]
+
+    y_off = jnp.einsum("bnhq,bnqhd,bnhdp->bnqhp",
+                       jnp.exp(cs), cc.astype(jnp.float32), h_in)
+    y = (y_diag + y_off).reshape(bsz, s + pad, h, p)[:, :s]
+    if return_final_state:
+        final = s_inc[:, -1]
+        if initial_state is not None:
+            final = final + d_inc[:, -1][..., None, None] * init
+        return y.astype(x.dtype), final
+    return y.astype(x.dtype)
+
+
+def ssd_scan_ref(x, a_log, b_mat, c_mat, *, initial_state=None,
+                 return_final_state: bool = False):
+    """Sequential oracle for :func:`ssd_scan` (lax.scan over time)."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    h0 = (jnp.zeros((bsz, h, n, p), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(hprev, t):
+        xt, at, bt, ct = t
+        hnew = jnp.exp(at)[..., None, None] * hprev + jnp.einsum(
+            "bhd,bhp->bhdp", bt, xt)
+        yt = jnp.einsum("bhd,bhdp->bhp", ct, hnew)
+        return hnew, yt
+
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(a_log, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(b_mat, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(c_mat, 1, 0).astype(jnp.float32))
+    hfin, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+    if return_final_state:
+        return y, hfin
+    return y
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM's matrix-memory cell) on top of the same chunked machinery
+# ---------------------------------------------------------------------------
+#
+# Cell:  C_t = f_t C_{t-1} + i_t k_t v_t^T ;  n_t = f_t n_{t-1} + i_t k_t
+#        h_t = (C_t^T q_t) / (|n_t^T q_t| + eps)
+# with f_t = sigmoid(f_pre), i_t = exp(i_pre).  We stabilise with a per-(batch,head)
+# global shift M = max(i_pre): both C and n scale by exp(-M), which cancels in the
+# division, so the chunked (global-shift) and stepwise-decode (running-max shift)
+# paths agree to fp tolerance.  Documented deviation from the xLSTM reference: we use
+# a scale-invariant ``|den| + eps`` denominator instead of the scale-*dependent*
+# ``max(|den|, 1)`` floor (see DESIGN.md §2).
+
+
+def mlstm_chunked(q: jax.Array, k: jax.Array, v: jax.Array,
+                  i_pre: jax.Array, f_pre: jax.Array, *,
+                  chunk: int = 128, scan_method: str = "matmul") -> jax.Array:
+    """q,k,v: (B,S,H,D); i_pre,f_pre: (B,S,H).  Returns (B,S,H,D)."""
+    d = q.shape[-1]
+    f_log = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    m = jnp.max(i_pre.astype(jnp.float32), axis=1, keepdims=True)      # (B,1,H)
+    gain = jnp.exp(i_pre.astype(jnp.float32) - m)                       # stabilised i_t
+    qs = q.astype(jnp.float32) / jnp.sqrt(d)
+    # numerator: SSD scan with x = gain * v, B = k, C = q
+    num = ssd_scan(v.astype(jnp.float32) * gain[..., None], f_log,
+                   k.astype(jnp.float32), qs, chunk=chunk, scan_method=scan_method)
+    # normaliser: same recurrence with x = gain (P = 1)
+    den = ssd_scan(gain[..., None], f_log, k.astype(jnp.float32), qs,
+                   chunk=chunk, scan_method=scan_method)[..., 0]
+    h = num / (jnp.abs(den) + 1e-6)[..., None]
+    return h.astype(q.dtype)
+
+
+def mlstm_ref(q, k, v, i_pre, f_pre):
+    """Sequential oracle with the identical (global-shift) stabilisation."""
+    bsz, s, h, d = q.shape
+    f_log = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    m = jnp.max(i_pre.astype(jnp.float32), axis=1, keepdims=True)
+    gain = jnp.exp(i_pre.astype(jnp.float32) - m)
+    qs = q.astype(jnp.float32) / jnp.sqrt(d)
+
+    def step(carry, t):
+        c, n = carry
+        qt, kt, vt, gt, ft = t
+        fgate = jnp.exp(ft)[..., None, None]
+        c = fgate * c + jnp.einsum("bhd,bhp->bhdp", kt, vt * gt[..., None])
+        n = fgate[..., 0] * n + kt * gt[..., None]
+        den = jnp.einsum("bhd,bhd->bh", n, qt)
+        num = jnp.einsum("bhd,bhdp->bhp", qt, c)
+        y = num / (jnp.abs(den) + 1e-6)[..., None]
+        return (c, n), y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0).astype(jnp.float32)
+               for a in (qs, k, v, gain, f_log))
+    init = (jnp.zeros((bsz, h, d, v.shape[-1]), jnp.float32),
+            jnp.zeros((bsz, h, d), jnp.float32))
+    _, ys = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(q.dtype)

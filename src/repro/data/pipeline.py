@@ -1,0 +1,104 @@
+"""Deterministic, restart-safe data pipeline.
+
+Batches are a pure function of ``(seed, step, shard)`` — a restarted or elastically
+resized job replays the exact stream with no data loss or duplication (the Trainer
+persists only the step counter in the checkpoint).  Two sources:
+
+  * ``SyntheticLM``: a fixed-order Markov-ish token stream (structured enough for a
+    ~100M model to visibly learn within a few hundred steps);
+  * ``ByteCorpus``: byte-level tokens from a text file, chunked deterministically.
+
+Host-side prefetch keeps ``prefetch`` batches in flight (overlap input with step).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+
+class SyntheticLM:
+    """Deterministic synthetic language: a noisy affine bigram chain.
+
+    ``x[t+1] = (a·x[t] + c) mod V`` with fixed (a, c); 10% of tokens are replaced
+    by noise (and the chain continues from the observed token), so next-token is
+    a *bigram* function predictable 90% of the time — CE drops toward
+    ``0.1·ln(V) + H(0.9/0.1)`` within tens of steps once the model learns the
+    token map, giving a cheap end-to-end training signal.
+    """
+
+    def __init__(self, vocab_size: int, seq_len: int, batch_size: int,
+                 seed: int = 0, a: int = 5, c: int = 17):
+        self.vocab = int(vocab_size)
+        self.seq = int(seq_len)
+        self.batch = int(batch_size)
+        self.seed = int(seed)
+        self.a, self.c = a, c
+
+    def batch_at(self, step: int, shard: int = 0, num_shards: int = 1) -> Dict:
+        rows = self.batch // num_shards
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, shard]))
+        toks = np.empty((rows, self.seq), np.int64)
+        toks[:, 0] = rng.integers(0, self.vocab, rows)
+        noise = rng.random((rows, self.seq)) < 0.1
+        rand = rng.integers(0, self.vocab, (rows, self.seq))
+        for t in range(1, self.seq):
+            nxt = (self.a * toks[:, t - 1] + self.c) % self.vocab
+            toks[:, t] = np.where(noise[:, t], rand[:, t], nxt)
+        return {"tokens": toks.astype(np.int32)}
+
+    def __iter__(self) -> Iterator[Dict]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+class ByteCorpus:
+    """Byte-level LM batches from a file, deterministic in (seed, step)."""
+
+    def __init__(self, path: str, seq_len: int, batch_size: int, seed: int = 0):
+        with open(path, "rb") as f:
+            self.data = np.frombuffer(f.read(), dtype=np.uint8)
+        assert len(self.data) > seq_len + 1, "corpus too small"
+        self.seq = seq_len
+        self.batch = batch_size
+        self.seed = seed
+
+    def batch_at(self, step: int, shard: int = 0, num_shards: int = 1) -> Dict:
+        rows = self.batch // num_shards
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, shard]))
+        starts = rng.integers(0, len(self.data) - self.seq - 1, rows)
+        toks = np.stack([self.data[s:s + self.seq] for s in starts])
+        return {"tokens": toks.astype(np.int32)}
+
+
+class Prefetcher:
+    """Background-thread prefetch of ``source.batch_at(step)``."""
+
+    def __init__(self, source, start_step: int = 0, prefetch: int = 2):
+        self.source = source
+        self.q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self.step = start_step
+        self._stop = threading.Event()
+        self.thread = threading.Thread(target=self._worker, daemon=True)
+        self.thread.start()
+
+    def _worker(self):
+        step = self.step
+        while not self._stop.is_set():
+            try:
+                self.q.put((step, self.source.batch_at(step)), timeout=0.5)
+                step += 1
+            except queue.Full:
+                continue
+
+    def next(self):
+        return self.q.get()
+
+    def stop(self):
+        self._stop.set()

@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (validated interpret=True)."""
+from repro.kernels.ops import scan_kernel, ssd_kernel

@@ -1,0 +1,27 @@
+"""jit'd public wrappers for the Pallas kernels."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.scan_mm import scan_tiles
+from repro.kernels.ssd_chunk import ssd_chunk_scan
+
+__all__ = ["scan_kernel", "ssd_kernel"]
+
+
+@functools.partial(jax.jit, static_argnames=("s", "variant", "accum_dtype", "interpret"))
+def scan_kernel(x: jax.Array, *, s: int = 128, variant: str = "scanul1",
+                accum_dtype=None, interpret: bool | None = None) -> jax.Array:
+    """Fused matmul-scan over the last axis (ScanU/ScanUL1, paper Alg. 1/2)."""
+    return scan_tiles(x, s=s, variant=variant, accum_dtype=accum_dtype,
+                      interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_kernel(x, a_log, b_mat, c_mat, *, chunk: int = 128,
+               interpret: bool | None = None):
+    """Fused chunked SSD scan (gated linear recurrence on the MXU)."""
+    return ssd_chunk_scan(x, a_log, b_mat, c_mat, chunk=chunk, interpret=interpret)

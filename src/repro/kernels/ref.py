@@ -1,0 +1,19 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scan import accum_dtype_for
+
+
+def scan_ref(x: jax.Array, *, accum_dtype=None) -> jax.Array:
+    """Oracle for ``scan_mm.scan_tiles``: plain cumsum in the accumulation dtype."""
+    acc = jnp.dtype(accum_dtype) if accum_dtype is not None else accum_dtype_for(x.dtype)
+    return jnp.cumsum(x.astype(acc), axis=-1, dtype=acc)
+
+
+def ssd_ref(x, a_log, b_mat, c_mat):
+    """Oracle for ``ssd_chunk.ssd_chunk_scan``: sequential recurrence over time."""
+    from repro.core.ssd import ssd_scan_ref
+    return ssd_scan_ref(x, a_log, b_mat, c_mat)

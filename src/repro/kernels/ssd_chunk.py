@@ -1,0 +1,110 @@
+"""Pallas TPU kernel for the chunked gated-linear-recurrence (SSD) scan.
+
+The sequence is processed chunk-by-chunk on the sequential Pallas grid; the inter-chunk
+state (the analogue of the paper's running ``partial``) lives in VMEM scratch, so — as
+in ``scan_mm`` — the whole recurrence is one kernel with 2·(bytes of q,k,v,gates)
+HBM traffic and *all* O(S·Q) work as MXU matmuls:
+
+    cs      = a_row @ U_Q                      (cumsum of log-decays — paper Eq. 1 form)
+    scores  = (C @ B^T) ∘ exp(cs_i - cs_j)     masked causal
+    y       = scores @ X + (C ∘ exp(cs)) @ state
+    state   = exp(cs_Q) * state + (B ∘ exp(cs_Q - cs))^T @ X
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.scan import upper_ones
+
+__all__ = ["ssd_chunk_scan"]
+
+
+def _kernel(x_ref, a_ref, b_ref, c_ref, u_ref, o_ref, state_ref, *, q: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)               # (Q, P)
+    a = a_ref[0, 0].astype(jnp.float32)               # (1, Q) log decays
+    bm = b_ref[0, 0].astype(jnp.float32)              # (Q, N)
+    cm = c_ref[0, 0].astype(jnp.float32)              # (Q, N)
+
+    # cumsum of log decays via triangular matmul (the paper's A @ U identity).
+    cs = jnp.dot(a, u_ref[...].astype(jnp.float32),
+                 preferred_element_type=jnp.float32)[0]          # (Q,)
+
+    li = cs[:, None] - cs[None, :]
+    causal = jnp.tril(jnp.ones((q, q), jnp.bool_))
+    lmat = jnp.where(causal, jnp.exp(li), 0.0)
+
+    scores = jnp.dot(cm, bm.T, preferred_element_type=jnp.float32) * lmat
+    y = jnp.dot(scores, x, preferred_element_type=jnp.float32)
+
+    state = state_ref[...]                            # (N, P)
+    y = y + jnp.dot(cm * jnp.exp(cs)[:, None], state,
+                    preferred_element_type=jnp.float32)
+
+    total = cs[-1]
+    decay_to_end = jnp.exp(total - cs)
+    new_state = jnp.exp(total) * state + jnp.dot(
+        (bm * decay_to_end[:, None]).T, x, preferred_element_type=jnp.float32)
+    state_ref[...] = new_state
+    o_ref[0, 0] = y.astype(o_ref.dtype)
+
+
+def ssd_chunk_scan(x: jax.Array, a_log: jax.Array, b_mat: jax.Array,
+                   c_mat: jax.Array, *, chunk: int = 128,
+                   interpret: bool | None = None) -> jax.Array:
+    """x: (B,S,H,P); a_log: (B,S,H); b_mat/c_mat: (B,S,H,N) -> y: (B,S,H,P)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    nc = sp // q
+
+    def to_bh(t, feat):
+        # (B,S,H,F) -> (B*H, nc, Q, F)
+        t = jnp.moveaxis(t, 2, 1).reshape(bsz * h, sp, feat)
+        return t.reshape(bsz * h, nc, q, feat)
+
+    xb = to_bh(x, p)
+    ab = to_bh(a_log[..., None], 1).reshape(bsz * h, nc, 1, q)
+    bb = to_bh(b_mat, n)
+    cb = to_bh(c_mat, n)
+    u = upper_ones(q, jnp.float32)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, q=q),
+        grid=(bsz * h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, q, p), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((q, q), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q, p), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz * h, nc, q, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+        name=f"ssd_chunk_q{q}",
+    )(xb, ab, bb, cb, u)
+
+    y = out.reshape(bsz, h, sp, p)
+    y = jnp.moveaxis(y, 1, 2)[:, :s]
+    return y

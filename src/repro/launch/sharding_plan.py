@@ -1,0 +1,120 @@
+"""Cell-level sharding plans: batch, KV-cache and optimizer-state PartitionSpecs."""
+from __future__ import annotations
+
+import re
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.utils.sharding import dp_axes, param_shardings
+
+
+def batch_specs(mesh: Mesh, batch_tree):
+    dp = dp_axes(mesh)
+    dp_size = 1
+    for a in (dp or ()):
+        dp_size *= mesh.shape[a]
+
+    def spec(x):
+        if not x.shape or x.shape[0] % dp_size:
+            return NamedSharding(mesh, P())      # batch==1 (long-context): replicate
+        return NamedSharding(mesh, P(*((dp,) + (None,) * (len(x.shape) - 1))))
+    return jax.tree.map(spec, batch_tree)
+
+
+# Decode-cache rules, matched on the flattened path ('/'-joined dict keys).
+# Each rule lists CANDIDATE specs in preference order (the tensor's own, unstacked
+# layout; leading layer-stack dims are padded with None).  The first candidate whose
+# sharded axes all divide evenly is chosen — e.g. GQA caches put kv-heads on
+# "model" when n_kv_heads ≥ TP degree, else fall back to sharding the cache
+# *sequence* axis over "model".
+# seq mode (batch==1 long-context) shards the time axis over "data" (SP).
+_CACHE_RULES = [
+    (re.compile(r"(^|/)(k|v)$"),
+     {"batch": [("dp", None, "model", None), ("dp", "model", None, None)],
+      "seq": [(None, "data", "model", None), (None, ("data", "model"), None, None)]}),
+    (re.compile(r"latent$"), {"batch": [("dp", None, None)],
+                              "seq": [(None, "data", None)]}),
+    (re.compile(r"k_rope$"), {"batch": [("dp", None, None)],
+                              "seq": [(None, "data", None)]}),
+    (re.compile(r"ssm$"), {"batch": [("dp", "model", None, None)],
+                           "seq": [(None, "model", None, None)]}),
+    (re.compile(r"conv$"), {"batch": [("dp", None, "model")],
+                            "seq": [(None, None, "model")]}),
+    (re.compile(r"(^|/)c$"),
+     {"batch": [("dp", "model", None, None), ("dp", None, "model", None)],
+      "seq": [(None, "model", None, None), (None, None, "model", None)]}),
+    (re.compile(r"(^|/)n$"),
+     {"batch": [("dp", "model", None), ("dp", None, "model")],
+      "seq": [(None, "model", None), (None, None, "model")]}),
+    (re.compile(r"(^|/)m$"), {"batch": [("dp", "model"), ("dp", None)],
+                              "seq": [(None, "model"), (None, None)]}),
+    (re.compile(r"rec"),
+     {"batch": [("dp", "model", None), ("dp", None, "model")],
+      "seq": [(None, "model", None), (None, None, "model")]}),
+]
+
+
+def _axis_size(mesh: Mesh, a) -> int:
+    if a is None:
+        return 1
+    if isinstance(a, tuple):
+        n = 1
+        for x in a:
+            n *= mesh.shape.get(x, 1)
+        return n
+    return mesh.shape.get(a, 1)
+
+
+def cache_specs(mesh: Mesh, cache_tree, *, seq_sharded: bool):
+    dp = dp_axes(mesh)
+    mode = "seq" if seq_sharded else "batch"
+
+    def path_str(kp):
+        parts = []
+        for k in kp:
+            if hasattr(k, "key"):
+                parts.append(str(k.key))
+            elif hasattr(k, "idx"):
+                parts.append(str(k.idx))
+        return "/".join(parts)
+
+    def resolve(spec, shape):
+        """Pad to rank, drop missing axes, null non-divisible entries."""
+        ndim = len(shape)
+        spec = tuple(dp if a == "dp" else a for a in spec)
+        if len(spec) < ndim:
+            spec = (None,) * (ndim - len(spec)) + spec
+        elif len(spec) > ndim:
+            spec = spec[-ndim:]
+        out = []
+        clean = True
+        for dim, a in zip(shape, spec):
+            if a is not None and not isinstance(a, tuple) \
+                    and a not in mesh.axis_names:
+                a = None
+            if isinstance(a, tuple):
+                a = tuple(x for x in a if x in mesh.axis_names) or None
+            if a is not None and dim % _axis_size(mesh, a):
+                a = None
+                clean = False
+            out.append(a)
+        return tuple(out), clean
+
+    def leaf_spec(kp, x):
+        path = path_str(kp)
+        for rx, table in _CACHE_RULES:
+            if rx.search(path):
+                chosen = None
+                for cand in table[mode]:
+                    spec, clean = resolve(cand, x.shape)
+                    if chosen is None:
+                        chosen = spec
+                    if clean:
+                        chosen = spec
+                        break
+                return NamedSharding(mesh, P(*chosen))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_tree)

@@ -1,0 +1,309 @@
+"""Attention variants: GQA/MQA (+qk-norm, softcap, local windows, prefix-LM),
+cross-attention (whisper), and MLA (minicpm3) with an absorbed decode path.
+
+All full-sequence paths take (B,S,D) and return (B,S,D); decode paths take a KV cache
+pytree plus the write position and update it functionally.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (apply_rope, linear, linear_init, ninit,
+                                 rmsnorm, rmsnorm_init, softcap)
+from repro.utils.sharding import constrain
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# standard / grouped-query attention
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, cfg, *, cross=False, dtype=jnp.float32):
+    hd = cfg.head_dim_
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": ninit(ks[0], (cfg.d_model, cfg.n_heads * hd), dtype=dtype),
+        "wk": ninit(ks[1], (cfg.d_model, cfg.n_kv_heads * hd), dtype=dtype),
+        "wv": ninit(ks[2], (cfg.d_model, cfg.n_kv_heads * hd), dtype=dtype),
+        "wo": ninit(ks[3], (cfg.n_heads * hd, cfg.d_model), dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def _split_heads(x, n, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd)
+
+
+def _gqa_scores(q, k, scale, cap):
+    """q: (B,S,K,G,D), k: (B,T,K,D) -> (B,K,G,S,T) fp32.
+
+    bf16 operands + f32 accumulation (preferred_element_type): any all-gather of
+    q/k that SPMD inserts moves bf16, not f32 (§Perf I4)."""
+    s = jnp.einsum("bskgd,btkd->bkgst", q, k,
+                   preferred_element_type=F32) * scale
+    return softcap(s, cap)
+
+
+def _gqa_out(probs, v, seq_sharded=False):
+    """probs: (B,K,G,S,T), v: (B,T,K,D) -> (B,S,K*G,D).
+
+    probs are cast to v's dtype (bf16 in production — flash-attention-standard)
+    so v's all-gather and the dot stay in bf16 with f32 accumulation."""
+    o = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v,
+                   preferred_element_type=F32)
+    if seq_sharded:
+        # pin the dot output to the query-sequence sharding so GSPMD never
+        # reshards the f32 probs inside the einsum (involuntary full remat)
+        o = constrain(o, "dp", "model", None, None, None)
+    b, s, k, g, d = o.shape
+    return o.reshape(b, s, k * g, d)
+
+
+def _tp_size():
+    from repro.utils.sharding import current_mesh
+    mesh = current_mesh()
+    return mesh.shape.get("model", 1) if mesh is not None else 1
+
+
+def _attn_head_spec(cfg):
+    """Head-axis sharding for attention intermediates.
+
+    When the TP degree does not divide n_kv_heads, GSPMD's fallback is
+    catastrophic: it shards the q·k CONTRACTION dim and all-reduces the full
+    S×T score matrix (observed: 223 GB/chip of f32[32768,32768] ARs on
+    gemma2 prefill).  In that case we pin attention to batch-only sharding —
+    the qkv activations get all-gathered once (MBs, not GBs) and attention
+    runs locally.  See EXPERIMENTS.md §Perf I1.
+    """
+    from repro.utils.sharding import current_mesh
+    mesh = current_mesh()
+    tp = mesh.shape.get("model", 1) if mesh is not None else 1
+    return "model" if (tp > 1 and cfg.n_kv_heads % tp == 0) else None
+
+
+def _qk(p, x, cfg, positions, kv_x=None, use_rope=True):
+    hd = cfg.head_dim_
+    q = _split_heads(linear({"w": p["wq"]}, x), cfg.n_heads, hd)
+    src = x if kv_x is None else kv_x
+    k = _split_heads(linear({"w": p["wk"]}, src), cfg.n_kv_heads, hd)
+    v = _split_heads(linear({"w": p["wv"]}, src), cfg.n_kv_heads, hd)
+    hs = _attn_head_spec(cfg)
+    q = constrain(q, "dp", None, hs, None)
+    k = constrain(k, "dp", None, hs, None)
+    v = constrain(v, "dp", None, hs, None)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if cfg.rope and use_rope and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_full(p, x, cfg, *, positions=None, causal=True, window=None,
+              prefix_len=None, kv_x=None, use_rope=True, return_cache=False,
+              cache_len=None):
+    """Full-sequence attention (training / prefill)."""
+    b, s, _ = x.shape
+    hd = cfg.head_dim_
+    kh, gh = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    q, k, v = _qk(p, x, cfg, positions, kv_x=kv_x, use_rope=use_rope)
+    if _attn_head_spec(cfg) is None and s > 1:
+        # context parallelism: kv-heads don't divide TP, so shard the QUERY
+        # sequence over "model" instead — attention flops/score memory split
+        # TP-ways, softmax (over t) stays local, and no contraction-dim AR
+        # (EXPERIMENTS.md §Perf I3).
+        q = constrain(q, "dp", "model", None, None)
+    qg = q.reshape(b, s, kh, gh, hd)
+    scores = _gqa_scores(qg, k, hd ** -0.5, cfg.attn_softcap)
+    t = k.shape[1]
+    if causal and kv_x is None:
+        i = jnp.arange(s)[:, None]
+        j = jnp.arange(t)[None, :]
+        mask = j <= i
+        if window is not None:
+            mask &= (i - j) < window
+        if prefix_len:
+            mask |= (i < prefix_len) & (j < prefix_len)
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    hs = _attn_head_spec(cfg)
+    seq_sharded = hs is None and s > 1
+    out = _gqa_out(probs, v, seq_sharded=seq_sharded).astype(x.dtype)
+    if seq_sharded:
+        # reshard the *small bf16* tensor to feature sharding for row-parallel wo
+        out = constrain(out.reshape(b, s, -1), "dp", None,
+                        "model" if (cfg.n_heads * hd) %
+                        _tp_size() == 0 else None)
+    else:
+        out = constrain(out.reshape(b, s, -1), "dp", None, hs)
+    y = linear({"w": p["wo"]}, out)
+    if not return_cache:
+        return y
+    clen = cache_len or s
+    kc = jnp.zeros((b, clen, kh, hd), x.dtype).at[:, :s].set(k.astype(x.dtype))
+    vc = jnp.zeros((b, clen, kh, hd), x.dtype).at[:, :s].set(v.astype(x.dtype))
+    return y, {"k": kc, "v": vc}
+
+
+def attn_decode(p, x, cfg, cache, pos, *, window=None):
+    """Single-token decode. x: (B,1,D); cache k/v: (B,T,K,D); pos: scalar int."""
+    b, s, _ = x.shape
+    hd = cfg.head_dim_
+    kh, gh = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    positions = jnp.full((b, s), pos, jnp.int32)
+    q, k, v = _qk(p, x, cfg, positions)
+    kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, 1)
+    vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, 1)
+    # batch==1 (long-context): sequence-parallel cache; else batch over dp with
+    # kv-heads over "model" — unless heads don't divide TP, in which case shard
+    # the cache TIME axis (flash-decoding style partial softmax) to avoid the
+    # contraction-sharded score all-reduce (§Perf I12).
+    hs = _attn_head_spec(cfg)
+    if b == 1:
+        kc = constrain(kc, None, "data", "model" if hs else None, None)
+        vc = constrain(vc, None, "data", "model" if hs else None, None)
+    elif hs is not None:
+        kc = constrain(kc, "dp", None, "model", None)
+        vc = constrain(vc, "dp", None, "model", None)
+    else:
+        kc = constrain(kc, "dp", "model", None, None)
+        vc = constrain(vc, "dp", "model", None, None)
+    t = kc.shape[1]
+    qg = q.reshape(b, s, kh, gh, hd)
+    scores = _gqa_scores(qg, kc, hd ** -0.5, cfg.attn_softcap)    # (B,K,G,1,T)
+    j = jnp.arange(t)
+    mask = j <= pos
+    if window is not None:
+        mask &= j > (pos - window)
+    scores = jnp.where(mask[None, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, vc).astype(x.dtype).reshape(b, s, -1)
+    y = linear({"w": p["wo"]}, out)
+    return y, {"k": kc, "v": vc}
+
+
+def attn_cross_decode(p, x, cfg, enc_cache):
+    """Cross-attention during decode: enc k/v precomputed at prefill."""
+    b, s, _ = x.shape
+    hd = cfg.head_dim_
+    kh, gh = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    q = _split_heads(linear({"w": p["wq"]}, x), cfg.n_heads, hd)
+    qg = q.reshape(b, s, kh, gh, hd)
+    scores = _gqa_scores(qg, enc_cache["k"], hd ** -0.5, cfg.attn_softcap)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, enc_cache["v"]).astype(x.dtype).reshape(b, s, -1)
+    return linear({"w": p["wo"]}, out)
+
+
+def cross_kv(p, enc_out, cfg):
+    hd = cfg.head_dim_
+    k = _split_heads(linear({"w": p["wk"]}, enc_out), cfg.n_kv_heads, hd)
+    v = _split_heads(linear({"w": p["wv"]}, enc_out), cfg.n_kv_heads, hd)
+    return {"k": k.astype(enc_out.dtype), "v": v.astype(enc_out.dtype)}
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, minicpm3/deepseek style)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(key, cfg, dtype=jnp.float32):
+    m = cfg.mla
+    h = cfg.n_heads
+    ks = jax.random.split(key, 6)
+    dqk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "q_a": ninit(ks[0], (cfg.d_model, m.q_lora_rank), dtype=dtype),
+        "q_a_norm": rmsnorm_init(m.q_lora_rank, dtype),
+        "q_b": ninit(ks[1], (m.q_lora_rank, h * dqk), dtype=dtype),
+        "kv_a": ninit(ks[2], (cfg.d_model, m.kv_lora_rank + m.qk_rope_head_dim),
+                      dtype=dtype),
+        "kv_a_norm": rmsnorm_init(m.kv_lora_rank, dtype),
+        "kv_b": ninit(ks[3], (m.kv_lora_rank,
+                              h * (m.qk_nope_head_dim + m.v_head_dim)), dtype=dtype),
+        "wo": ninit(ks[4], (h * m.v_head_dim, cfg.d_model), dtype=dtype),
+    }
+
+
+def _mla_qkv_latent(p, x, cfg, positions):
+    m, h = cfg.mla, cfg.n_heads
+    b, s, _ = x.shape
+    qa = rmsnorm(p["q_a_norm"], linear({"w": p["q_a"]}, x), cfg.norm_eps)
+    q = linear({"w": p["q_b"]}, qa).reshape(
+        b, s, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    kv = linear({"w": p["kv_a"]}, x)
+    latent, k_rope = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    latent = rmsnorm(p["kv_a_norm"], latent, cfg.norm_eps)
+    k_rope = k_rope[:, :, None, :]                     # (B,S,1,dr) shared head
+    if positions is not None:
+        q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+        k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope, latent, k_rope
+
+
+def mla_full(p, x, cfg, *, positions=None, return_cache=False, cache_len=None):
+    """Naive (expanded) MLA for train/prefill."""
+    m, h = cfg.mla, cfg.n_heads
+    b, s, _ = x.shape
+    q_nope, q_rope, latent, k_rope = _mla_qkv_latent(p, x, cfg, positions)
+    kvb = linear({"w": p["kv_b"]}, latent).reshape(
+        b, s, h, m.qk_nope_head_dim + m.v_head_dim)
+    k_nope, v = jnp.split(kvb, [m.qk_nope_head_dim], axis=-1)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    scores = (jnp.einsum("bshd,bthd->bhst", q_nope.astype(F32), k_nope.astype(F32))
+              + jnp.einsum("bshd,btkd->bhst", q_rope.astype(F32),
+                           k_rope[:, :, 0:1].astype(F32))) * scale
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    scores = jnp.where(j <= i, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v.astype(F32)).astype(x.dtype)
+    y = linear({"w": p["wo"]}, out.reshape(b, s, -1))
+    if not return_cache:
+        return y
+    clen = cache_len or s
+    lat_c = jnp.zeros((b, clen, m.kv_lora_rank), x.dtype).at[:, :s].set(
+        latent.astype(x.dtype))
+    kr_c = jnp.zeros((b, clen, m.qk_rope_head_dim), x.dtype).at[:, :s].set(
+        k_rope[:, :, 0].astype(x.dtype))
+    return y, {"latent": lat_c, "k_rope": kr_c}
+
+
+def mla_decode(p, x, cfg, cache, pos):
+    """Absorbed-matrix MLA decode: attention runs in the latent space, so the cache
+    stays compressed ((r + dr) per token instead of 2·H·hd) — the memory-roofline win
+    that motivates MLA."""
+    m, h = cfg.mla, cfg.n_heads
+    b, s, _ = x.shape
+    positions = jnp.full((b, s), pos, jnp.int32)
+    q_nope, q_rope, latent, k_rope = _mla_qkv_latent(p, x, cfg, positions)
+    lat_c = jax.lax.dynamic_update_slice_in_dim(
+        cache["latent"], latent.astype(cache["latent"].dtype), pos, 1)
+    kr_c = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope[:, :, 0].astype(cache["k_rope"].dtype), pos, 1)
+    wub = p["kv_b"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim)
+    w_uk = wub[:, :, :m.qk_nope_head_dim]              # (r, H, dn)
+    w_uv = wub[:, :, m.qk_nope_head_dim:]              # (r, H, dv)
+    q_eff = jnp.einsum("bshd,rhd->bshr", q_nope.astype(F32), w_uk.astype(F32))
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    scores = (jnp.einsum("bshr,btr->bhst", q_eff, lat_c.astype(F32))
+              + jnp.einsum("bshd,btd->bhst", q_rope.astype(F32),
+                           kr_c.astype(F32))) * scale
+    mask = jnp.arange(lat_c.shape[1]) <= pos
+    scores = jnp.where(mask[None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhst,btr->bshr", probs, lat_c.astype(F32))
+    out = jnp.einsum("bshr,rhv->bshv", ctx, w_uv.astype(F32)).astype(x.dtype)
+    y = linear({"w": p["wo"]}, out.reshape(b, s, -1))
+    return y, {"latent": lat_c, "k_rope": kr_c}

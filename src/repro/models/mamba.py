@@ -1,0 +1,129 @@
+"""Mamba2 block (used by zamba2): selective SSM whose sequence mixing runs through
+the chunked matmul scan (``repro.core.ssd`` / the Pallas ``ssd_chunk`` kernel) — the
+paper's scan-via-MXU idea as a model layer."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ssd import ssd_scan
+from repro.kernels.ops import ssd_kernel
+from repro.models.layers import linear, ninit, rmsnorm, rmsnorm_init
+
+F32 = jnp.float32
+
+
+def mamba_init(key, cfg, dtype=jnp.float32):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner = s.expand * d
+    g = s.n_groups
+    conv_dim = d_inner + 2 * g * s.d_state
+    ks = jax.random.split(key, 8)
+    return {
+        # order: [z (d_inner), x (d_inner), B (g*N), C (g*N), dt (H)]
+        "in_proj": ninit(ks[0], (d, 2 * d_inner + 2 * g * s.d_state + s.n_heads),
+                         dtype=dtype),
+        "conv_w": ninit(ks[1], (s.conv_kernel, conv_dim), scale=0.5, dtype=dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, s.n_heads)).astype(dtype),
+        "dt_bias": jnp.zeros((s.n_heads,), dtype),
+        "d_skip": jnp.ones((s.n_heads,), dtype),
+        "gate_norm": rmsnorm_init(d_inner, dtype),
+        "out_proj": ninit(ks[2], (d_inner, d), dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b, cache=None):
+    """Depthwise causal conv. x: (B,S,C); w: (K,C). Returns (y, new_cache)."""
+    k = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)            # (B, S+K-1, C)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k)) + b
+    new_cache = xp[:, -(k - 1):, :]
+    return y, new_cache
+
+
+def _project(p, x, cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    g = s.n_groups
+    zxbcdt = linear({"w": p["in_proj"]}, x)
+    z, xin, bmat, cmat, dt = jnp.split(
+        zxbcdt,
+        [d_inner, 2 * d_inner, 2 * d_inner + g * s.d_state,
+         2 * d_inner + 2 * g * s.d_state], axis=-1)
+    return z, xin, bmat, cmat, dt
+
+
+def _gates(p, dt):
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"].astype(F32))   # (B,S,H)
+    a_log = -jnp.exp(p["a_log"].astype(F32)) * dt                      # log decay
+    return dt, a_log
+
+
+def mamba_full(p, x, cfg, *, return_cache=False, use_kernel=False):
+    """Full-sequence Mamba2 mixer. x: (B,S,D)."""
+    s = cfg.ssm
+    b, seq, _ = x.shape
+    d_inner = s.expand * cfg.d_model
+    g = s.n_groups
+    z, xin, bmat, cmat, dt = _project(p, x, cfg)
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)
+    conv_out, conv_cache = _causal_conv(conv_in, p["conv_w"].astype(x.dtype),
+                                        p["conv_b"].astype(x.dtype))
+    conv_out = jax.nn.silu(conv_out)
+    xin, bmat, cmat = jnp.split(conv_out, [d_inner, d_inner + g * s.d_state], axis=-1)
+    dt, a_log = _gates(p, dt)
+    xh = xin.reshape(b, seq, s.n_heads, s.head_dim)
+    xh = xh * dt[..., None]                            # fold dt into inputs
+    rep = s.n_heads // g
+    bm = jnp.repeat(bmat.reshape(b, seq, g, s.d_state), rep, axis=2)
+    cm = jnp.repeat(cmat.reshape(b, seq, g, s.d_state), rep, axis=2)
+    if use_kernel and cfg.scan_method == "kernel":
+        y = ssd_kernel(xh.astype(F32), a_log, bm.astype(F32), cm.astype(F32),
+                       chunk=s.chunk)
+        state = None
+    else:
+        y, state = ssd_scan(xh.astype(F32), a_log, bm.astype(F32), cm.astype(F32),
+                            chunk=s.chunk, scan_method=cfg.scan_method,
+                            return_final_state=True)
+    y = y + xh * p["d_skip"].astype(F32)[:, None]
+    y = y.reshape(b, seq, d_inner).astype(x.dtype)
+    y = rmsnorm(p["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = linear({"w": p["out_proj"]}, y)
+    if return_cache:
+        return out, {"conv": conv_cache, "ssm": state.astype(F32)}
+    return out
+
+
+def mamba_step(p, x, cfg, cache):
+    """Single-token decode step. x: (B,1,D); cache: {conv (B,K-1,C), ssm (B,H,N,P)}."""
+    s = cfg.ssm
+    b = x.shape[0]
+    d_inner = s.expand * cfg.d_model
+    g = s.n_groups
+    z, xin, bmat, cmat, dt = _project(p, x, cfg)
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)
+    conv_out, conv_cache = _causal_conv(conv_in, p["conv_w"].astype(x.dtype),
+                                        p["conv_b"].astype(x.dtype),
+                                        cache=cache["conv"])
+    conv_out = jax.nn.silu(conv_out)
+    xin, bmat, cmat = jnp.split(conv_out, [d_inner, d_inner + g * s.d_state], axis=-1)
+    dt, a_log = _gates(p, dt)                          # (B,1,H)
+    xh = (xin.reshape(b, 1, s.n_heads, s.head_dim) * dt[..., None])[:, 0]  # (B,H,P)
+    rep = s.n_heads // g
+    bm = jnp.repeat(bmat.reshape(b, g, s.d_state), rep, axis=1)            # (B,H,N)
+    cm = jnp.repeat(cmat.reshape(b, g, s.d_state), rep, axis=1)
+    h = cache["ssm"]                                   # (B,H,N,P) f32
+    h = jnp.exp(a_log[:, 0])[..., None, None] * h + jnp.einsum(
+        "bhn,bhp->bhnp", bm.astype(F32), xh.astype(F32))
+    y = jnp.einsum("bhn,bhnp->bhp", cm.astype(F32), h)
+    y = y + xh.astype(F32) * p["d_skip"].astype(F32)[:, None]
+    y = y.reshape(b, 1, d_inner).astype(x.dtype)
+    y = rmsnorm(p["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = linear({"w": p["out_proj"]}, y)
+    return out, {"conv": conv_cache, "ssm": h}

@@ -1,0 +1,72 @@
+"""Model registry + input specs for every (architecture × shape) cell."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES
+from repro.models.transformer import TransformerLM
+
+ARCHS = {
+    "whisper-small": "repro.configs.whisper_small",
+    "gemma2-2b": "repro.configs.gemma2_2b",
+    "qwen3-4b": "repro.configs.qwen3_4b",
+    "minicpm3-4b": "repro.configs.minicpm3_4b",
+    "llama3-8b": "repro.configs.llama3_8b",
+    "paligemma-3b": "repro.configs.paligemma_3b",
+    "zamba2-1.2b": "repro.configs.zamba2_1p2b",
+    "llama4-scout-17b-16e": "repro.configs.llama4_scout_17b_16e",
+    "deepseek-moe-16b": "repro.configs.deepseek_moe_16b",
+    "xlstm-350m": "repro.configs.xlstm_350m",
+}
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(ARCHS[arch])
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def build_model(cfg: ModelConfig) -> TransformerLM:
+    return TransformerLM(cfg)
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether this (arch × shape) cell runs; reason when skipped (DESIGN.md §4)."""
+    if shape.name == "long_500k" and not cfg.supports_long:
+        return False, "long_500k skipped: pure full-attention arch (quadratic)"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    cdt = jnp.dtype(cfg.dtype)
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+    s_text = s - (cfg.n_img_tokens if cfg.family == "vlm" else 0)
+    specs = {"tokens": jax.ShapeDtypeStruct((b, s_text), i32)}
+    if cfg.family == "vlm":
+        specs["img_embed"] = jax.ShapeDtypeStruct((b, cfg.n_img_tokens,
+                                                   cfg.d_model), cdt)
+    if cfg.family == "encdec":
+        specs["enc_embed"] = jax.ShapeDtypeStruct((b, cfg.enc_len,
+                                                   cfg.d_model), cdt)
+    return specs
+
+
+def synth_batch(cfg: ModelConfig, shape: ShapeConfig, key) -> Dict:
+    """Random concrete batch matching input_specs (smoke tests / examples)."""
+    specs = input_specs(cfg, shape)
+    out = {}
+    for name, sds in specs.items():
+        key, k = jax.random.split(key)
+        if sds.dtype == jnp.int32:
+            out[name] = jax.random.randint(k, sds.shape, 0,
+                                           min(cfg.vocab_size, 1000), jnp.int32)
+        else:
+            out[name] = (jax.random.normal(k, sds.shape) * 0.3).astype(sds.dtype)
+    return out

@@ -1,0 +1,212 @@
+"""xLSTM blocks: mLSTM (matrix memory — parallelised with the chunked matmul scan)
+and sLSTM (scalar memory with recurrent weight mixing — *not* associative, so it runs
+as a sequential ``lax.scan``; documented paper-technique inapplicability, DESIGN §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ssd import mlstm_chunked
+from repro.models.layers import linear, ninit, rmsnorm, rmsnorm_init
+from repro.models.mamba import _causal_conv
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+
+def mlstm_block_init(key, cfg, dtype=jnp.float32):
+    x = cfg.xlstm
+    d = cfg.d_model
+    d_inner = int(x.proj_factor * d)
+    hd = d_inner // x.n_heads
+    ks = jax.random.split(key, 9)
+    return {
+        "in_proj": ninit(ks[0], (d, 2 * d_inner), dtype=dtype),   # (x_in, z)
+        "conv_w": ninit(ks[1], (x.conv_kernel, d_inner), scale=0.5, dtype=dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "wq": ninit(ks[2], (d_inner, d_inner), dtype=dtype),
+        "wk": ninit(ks[3], (d_inner, d_inner), dtype=dtype),
+        "wv": ninit(ks[4], (d_inner, d_inner), dtype=dtype),
+        "w_if": ninit(ks[5], (d_inner, 2 * x.n_heads), scale=0.01, dtype=dtype),
+        "if_bias": jnp.concatenate([jnp.zeros((x.n_heads,)),
+                                    jnp.linspace(3.0, 6.0, x.n_heads)]).astype(dtype),
+        "skip": jnp.ones((d_inner,), dtype),
+        "out_norm": rmsnorm_init(d_inner, dtype),
+        "out_proj": ninit(ks[6], (d_inner, d), dtype=dtype),
+    }
+
+
+def _mlstm_qkvif(p, x, cfg, conv_cache=None):
+    xl = cfg.xlstm
+    d_inner = int(xl.proj_factor * cfg.d_model)
+    b, s, _ = x.shape
+    xin, z = jnp.split(linear({"w": p["in_proj"]}, x), 2, axis=-1)
+    conv_out, conv_cache = _causal_conv(xin, p["conv_w"].astype(x.dtype),
+                                        p["conv_b"].astype(x.dtype), cache=conv_cache)
+    xc = jax.nn.silu(conv_out)
+    hd = d_inner // xl.n_heads
+    q = linear({"w": p["wq"]}, xc).reshape(b, s, xl.n_heads, hd)
+    k = linear({"w": p["wk"]}, xc).reshape(b, s, xl.n_heads, hd)
+    v = linear({"w": p["wv"]}, xin).reshape(b, s, xl.n_heads, hd)
+    gates = linear({"w": p["w_if"]}, xin).astype(F32) + p["if_bias"].astype(F32)
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)        # (B,S,H)
+    return q, k, v, i_pre, f_pre, xc, z, conv_cache
+
+
+def mlstm_block(p, x, cfg, *, return_cache=False):
+    xl = cfg.xlstm
+    b, s, _ = x.shape
+    d_inner = int(xl.proj_factor * cfg.d_model)
+    q, k, v, i_pre, f_pre, xc, z, conv_cache = _mlstm_qkvif(p, x, cfg)
+    h = mlstm_chunked(q, k, v, i_pre, f_pre, chunk=128,
+                      scan_method=cfg.scan_method)
+    h = h.reshape(b, s, d_inner) + p["skip"].astype(x.dtype) * xc
+    h = rmsnorm(p["out_norm"], h, cfg.norm_eps)
+    out = linear({"w": p["out_proj"]}, h * jax.nn.silu(z))
+    if not return_cache:
+        return out
+    hd = d_inner // xl.n_heads
+    # stepwise decode state: matrix memory C, normaliser n, running max m
+    kf = k.astype(F32) / jnp.sqrt(hd)
+    flog = jax.nn.log_sigmoid(f_pre)
+    # reconstruct the exact end-of-sequence stabilised state by replay (prefill only)
+    def step(carry, t):
+        c, n, m = carry
+        kt, vt, it, ft = t
+        m_new = jnp.maximum(ft + m, it)
+        fs = jnp.exp(ft + m - m_new)
+        is_ = jnp.exp(it - m_new)
+        c = fs[..., None, None] * c + is_[..., None, None] * jnp.einsum(
+            "bhd,bhp->bhdp", kt, vt)
+        n = fs[..., None] * n + is_[..., None] * kt
+        return (c, n, m_new), None
+    init = (jnp.zeros((b, xl.n_heads, hd, hd), F32),
+            jnp.zeros((b, xl.n_heads, hd), F32),
+            jnp.full((b, xl.n_heads), -1e30, F32))
+    xs = (jnp.moveaxis(kf, 1, 0), jnp.moveaxis(v.astype(F32), 1, 0),
+          jnp.moveaxis(i_pre, 1, 0), jnp.moveaxis(flog, 1, 0))
+    (c, n, m), _ = jax.lax.scan(step, init, xs)
+    return out, {"conv": conv_cache, "c": c, "n": n, "m": m}
+
+
+def mlstm_block_step(p, x, cfg, cache):
+    """Single-token decode with the official running-max stabilisation."""
+    xl = cfg.xlstm
+    b = x.shape[0]
+    d_inner = int(xl.proj_factor * cfg.d_model)
+    hd = d_inner // xl.n_heads
+    q, k, v, i_pre, f_pre, xc, z, conv_cache = _mlstm_qkvif(
+        p, x, cfg, conv_cache=cache["conv"])
+    qt = q[:, 0].astype(F32) / jnp.sqrt(hd)
+    kt = k[:, 0].astype(F32) / jnp.sqrt(hd)
+    vt = v[:, 0].astype(F32)
+    it, ft = i_pre[:, 0], jax.nn.log_sigmoid(f_pre[:, 0])
+    c, n, m = cache["c"], cache["n"], cache["m"]
+    m_new = jnp.maximum(ft + m, it)
+    fs = jnp.exp(ft + m - m_new)
+    is_ = jnp.exp(it - m_new)
+    c = fs[..., None, None] * c + is_[..., None, None] * jnp.einsum(
+        "bhd,bhp->bhdp", kt, vt)
+    n = fs[..., None] * n + is_[..., None] * kt
+    num = jnp.einsum("bhd,bhdp->bhp", qt, c)
+    den = jnp.einsum("bhd,bhd->bh", qt, n)
+    h = (num / (jnp.abs(den) + 1e-6)[..., None]).reshape(b, 1, d_inner)
+    h = h.astype(x.dtype) + p["skip"].astype(x.dtype) * xc
+    h = rmsnorm(p["out_norm"], h, cfg.norm_eps)
+    out = linear({"w": p["out_proj"]}, h * jax.nn.silu(z))
+    return out, {"conv": conv_cache, "c": c, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (sequential: recurrence is non-associative)
+# ---------------------------------------------------------------------------
+
+
+def slstm_block_init(key, cfg, dtype=jnp.float32):
+    x = cfg.xlstm
+    d = cfg.d_model
+    hd = d // x.n_heads
+    ks = jax.random.split(key, 8)
+    d_ff = int(4 * d / 3)
+    return {
+        "conv_w": ninit(ks[0], (x.conv_kernel, d), scale=0.5, dtype=dtype),
+        "conv_b": jnp.zeros((d,), dtype),
+        "w_in": ninit(ks[1], (d, 4 * d), dtype=dtype),            # z,i,f,o inputs
+        "r": ninit(ks[2], (4, x.n_heads, hd, hd), scale=hd ** -0.5, dtype=dtype),
+        "gate_bias": jnp.concatenate(
+            [jnp.zeros((2 * d,)),
+             jnp.tile(jnp.linspace(3.0, 6.0, x.n_heads)[:, None], (1, hd)).ravel(),
+             jnp.zeros((d,))]).astype(dtype),
+        "out_norm": rmsnorm_init(d, dtype),
+        "ff_up": ninit(ks[3], (d, 2 * d_ff), dtype=dtype),
+        "ff_down": ninit(ks[4], (d_ff, d), dtype=dtype),
+    }
+
+
+def _slstm_scan(p, wx, cfg, state):
+    """wx: (B,S,4d) input projections (pre-bias).  Sequential over S."""
+    x = cfg.xlstm
+    d = cfg.d_model
+    hd = d // x.n_heads
+    b, s, _ = wx.shape
+    r = p["r"].astype(F32)                              # (4, H, hd, hd)
+    bias = p["gate_bias"].astype(F32)
+
+    def step(carry, wt):
+        c, n, m, h = carry                              # (B,H,hd) each; m (B,H,hd)
+        pre = wt + bias                                  # (B, 4d)
+        pre = pre.reshape(b, 4, x.n_heads, hd)
+        rh = jnp.einsum("bhd,ghde->bghe", h, r)          # recurrent mixing
+        zt = jnp.tanh(pre[:, 0] + rh[:, 0])
+        it = pre[:, 1] + rh[:, 1]                        # log-space input gate
+        ft = jax.nn.log_sigmoid(pre[:, 2] + rh[:, 2])    # log forget gate
+        ot = jax.nn.sigmoid(pre[:, 3] + rh[:, 3])
+        m_new = jnp.maximum(ft + m, it)
+        ci = jnp.exp(it - m_new)
+        cf = jnp.exp(ft + m - m_new)
+        c = cf * c + ci * zt
+        n = cf * n + ci
+        h_new = ot * c / (n + 1e-6)
+        return (c, n, m_new, h_new), h_new
+
+    (c, n, m, h), ys = jax.lax.scan(step, state, jnp.moveaxis(wx.astype(F32), 1, 0))
+    return jnp.moveaxis(ys, 0, 1), (c, n, m, h)
+
+
+def slstm_state_init(b, cfg):
+    x = cfg.xlstm
+    hd = cfg.d_model // x.n_heads
+    z = jnp.zeros((b, x.n_heads, hd), F32)
+    return (z, z, jnp.full((b, x.n_heads, hd), -1e30, F32), z)
+
+
+def slstm_block(p, x, cfg, *, state=None, return_cache=False):
+    b, s, _ = x.shape
+    conv_cache = None if state is None else state.get("conv")
+    st = slstm_state_init(b, cfg) if state is None else state["rec"]
+    conv_out, conv_cache = _causal_conv(x, p["conv_w"].astype(x.dtype),
+                                        p["conv_b"].astype(x.dtype),
+                                        cache=conv_cache)
+    xc = jax.nn.silu(conv_out)
+    # z and o gates see the raw input; i and f see the conv path (xLSTM convention)
+    wx = linear({"w": p["w_in"]}, x)
+    wc = linear({"w": p["w_in"]}, xc)
+    d = cfg.d_model
+    wmix = jnp.concatenate([wx[..., :d], wc[..., d:3 * d], wx[..., 3 * d:]], axis=-1)
+    ys, st = _slstm_scan(p, wmix, cfg, st)
+    h = ys.reshape(b, s, d).astype(x.dtype)
+    h = rmsnorm(p["out_norm"], h, cfg.norm_eps)
+    up, gate = jnp.split(linear({"w": p["ff_up"]}, h), 2, axis=-1)
+    out = linear({"w": p["ff_down"]}, up * jax.nn.gelu(gate, approximate=True))
+    if return_cache:
+        return out, {"conv": conv_cache, "rec": st}
+    return out
+
+
+def slstm_block_step(p, x, cfg, cache):
+    return slstm_block(p, x, cfg, state=cache, return_cache=True)

@@ -1,0 +1,70 @@
+"""Serving engine: batched prefill + decode with KV caches and the paper's
+scan-based top-p (nucleus) sampler wired into the decode step (paper §5/§6.5 —
+radix sort + prefix sum + inverse-transform sample, all on the matmul scan)."""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.primitives import top_p_sample
+from repro.models.model import build_model
+from repro.utils.sharding import use_mesh
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, *, mesh=None, max_len: int = 512,
+                 top_p: float = 0.9, temperature: float = 1.0,
+                 sampler: str = "topp_scan"):
+        self.cfg = cfg
+        self.params = params
+        self.mesh = mesh
+        self.max_len = max_len
+        self.top_p = top_p
+        self.temperature = temperature
+        self.sampler = sampler
+        self.model = build_model(cfg)
+        self._prefill = jax.jit(self._prefill_impl)
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
+
+    # ---- sampling (the paper's operator) ----
+    def _sample(self, logits, key):
+        if self.sampler == "greedy":
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        method = "matmul"
+        sort_method = "radix" if self.sampler == "topp_scan" else "xla"
+        return top_p_sample(logits, key, p=self.top_p,
+                            temperature=self.temperature, method=method,
+                            sort_method=sort_method).astype(jnp.int32)
+
+    def _prefill_impl(self, params, batch, key):
+        with use_mesh(self.mesh):
+            last_logits, caches = self.model.prefill(params, batch,
+                                                     cache_len=self.max_len)
+            tok = self._sample(last_logits, key)
+            return tok, caches
+
+    def _decode_impl(self, params, caches, tok, pos, key):
+        with use_mesh(self.mesh):
+            logits, caches = self.model.decode_step(params, tok[:, None],
+                                                    caches, pos)
+            new_tok = self._sample(logits, key)
+            return new_tok, caches
+
+    def generate(self, batch: Dict, max_new_tokens: int, key) -> jnp.ndarray:
+        """batch: model inputs incl. "tokens" (B,S).  Returns (B, new_tokens)."""
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        off = self.cfg.n_img_tokens if self.cfg.family == "vlm" else 0
+        key, k0 = jax.random.split(key)
+        tok, caches = self._prefill(self.params, batch, k0)
+        out = [tok]
+        pos = s + off
+        for i in range(max_new_tokens - 1):
+            key, k = jax.random.split(key)
+            tok, caches = self._decode(self.params, caches, tok,
+                                       jnp.asarray(pos + i, jnp.int32), k)
+            out.append(tok)
+        return jnp.stack(out, axis=1)

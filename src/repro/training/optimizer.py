@@ -1,0 +1,102 @@
+"""AdamW (explicit pytree implementation) with mixed-precision state handling.
+
+States are fp32; parameters may be bf16 or fp32 (updates computed in fp32 and cast
+back).  With ``zero_over`` set, first/second moments are sharded over the data axis
+in addition to the parameter's own sharding (ZeRO-1 style) — wired up by the Trainer
+via ``opt_state_specs``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from jax.sharding import PartitionSpec as P
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+def lr_at(cfg: AdamWConfig, step):
+    """Linear warmup + cosine decay."""
+    step = step.astype(F32) if hasattr(step, "astype") else jnp.asarray(step, F32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def adamw_init(params):
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+    return {"mu": zeros,
+            "nu": jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(F32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, grads, opt_state, params):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = lr_at(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(F32)
+    b2c = 1 - cfg.b2 ** step.astype(F32)
+
+    def upd(g, m, v, p):
+        g = g.astype(F32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:                                  # decay matrices only
+            delta = delta + cfg.weight_decay * p.astype(F32)
+        newp = (p.astype(F32) - lr * delta).astype(p.dtype)
+        return newp, m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["mu"])
+    flat_v = treedef.flatten_up_to(opt_state["nu"])
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"mu": new_m, "nu": new_v, "step": step}, metrics
+
+
+def opt_state_specs(param_specs, *, zero_axis: Optional[str] = None):
+    """PartitionSpecs for opt state; optionally ZeRO-shard moments over ``zero_axis``
+    along the first dimension that is unsharded in the param spec."""
+    def moment_spec(ps):
+        if zero_axis is None:
+            return ps
+        parts = list(ps)
+        for i, a in enumerate(parts):
+            if a is None:
+                parts[i] = zero_axis
+                return P(*parts)
+        return ps
+    mu = jax.tree.map(moment_spec, param_specs, is_leaf=lambda x: isinstance(x, P))
+    return {"mu": mu, "nu": mu, "step": P()}

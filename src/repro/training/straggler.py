@@ -1,0 +1,69 @@
+"""Straggler detection + mitigation policy hooks.
+
+At thousand-node scale, slow hosts (thermal throttling, failing HBM, noisy
+neighbours) stretch every synchronous step.  The monitor keeps an EWMA/EWVAR of step
+times per worker and flags outliers; the policy decides between logging, excluding
+the worker from the next elastic re-mesh, or requesting a checkpoint-restart without
+it.  On this single-host container the monitor is exercised with synthetic timings
+(see tests) — the interface is what a cluster launcher consumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class StragglerConfig:
+    alpha: float = 0.1            # EWMA smoothing
+    z_threshold: float = 4.0      # flag if step_time > mean + z*std
+    min_samples: int = 16
+    consecutive: int = 3          # require N consecutive outliers
+
+
+class StragglerMonitor:
+    def __init__(self, cfg: StragglerConfig = StragglerConfig(),
+                 on_straggler: Optional[Callable[[int, float], None]] = None):
+        self.cfg = cfg
+        self.mean: Dict[int, float] = {}
+        self.var: Dict[int, float] = {}
+        self.count: Dict[int, int] = {}
+        self.streak: Dict[int, int] = {}
+        self.flagged: List[int] = []
+        self.on_straggler = on_straggler
+
+    def record(self, worker: int, step_time: float) -> bool:
+        """Returns True when this worker is (newly) flagged as a straggler.
+
+        Outlier samples are NOT absorbed into the EWMA — otherwise a degrading
+        worker drags its own baseline up and never accumulates a streak.
+        """
+        c = self.count.get(worker, 0)
+        is_outlier = False
+        if c >= self.cfg.min_samples:
+            std = math.sqrt(max(self.var[worker], 1e-12))
+            is_outlier = step_time > (self.mean[worker]
+                                      + self.cfg.z_threshold * std)
+        if c == 0:
+            self.mean[worker] = step_time
+            self.var[worker] = 0.0
+        elif not is_outlier:
+            a = self.cfg.alpha
+            d = step_time - self.mean[worker]
+            self.mean[worker] += a * d
+            self.var[worker] = (1 - a) * (self.var[worker] + a * d * d)
+        self.count[worker] = c + 1
+        if c + 1 < self.cfg.min_samples:
+            return False
+        self.streak[worker] = self.streak.get(worker, 0) + 1 if is_outlier else 0
+        if (self.streak[worker] >= self.cfg.consecutive
+                and worker not in self.flagged):
+            self.flagged.append(worker)
+            if self.on_straggler:
+                self.on_straggler(worker, step_time)
+            return True
+        return False
+
+    def healthy_workers(self, all_workers: List[int]) -> List[int]:
+        return [w for w in all_workers if w not in self.flagged]

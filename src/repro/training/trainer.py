@@ -1,0 +1,142 @@
+"""Trainer: jitted train step with sharded state, grad accumulation, checkpoints,
+resume, and straggler monitoring.  Works on 1 CPU device or a production mesh
+unchanged (shardings degrade to replication)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.model import build_model
+from repro.training import optimizer as opt_lib
+from repro.training.checkpoint import CheckpointManager
+from repro.training.straggler import StragglerMonitor
+from repro.utils.sharding import dp_axes, param_shardings, use_mesh
+
+F32 = jnp.float32
+
+
+class Trainer:
+    def __init__(self, cfg, opt_cfg: opt_lib.AdamWConfig, *,
+                 mesh: Optional[Mesh] = None, ckpt_dir: Optional[str] = None,
+                 grad_accum: int = 1, param_dtype=jnp.float32):
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.mesh = mesh
+        self.model = build_model(cfg)
+        self.grad_accum = grad_accum
+        self.param_dtype = param_dtype
+        self.ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
+        self.monitor = StragglerMonitor()
+        self._step_fn = None
+
+    # ---- state ----
+    def init_state(self, key) -> Dict[str, Any]:
+        params = self.model.init(key, dtype=self.param_dtype)
+        opt = opt_lib.adamw_init(params)
+        state = {"params": params, "opt": opt}
+        if self.mesh is not None:
+            shards = self.state_shardings(state)
+            state = jax.tree.map(jax.device_put, state, shards)
+        return state
+
+    def state_shardings(self, state):
+        assert self.mesh is not None
+        return {"params": param_shardings(self.mesh, state["params"]),
+                "opt": {"mu": param_shardings(self.mesh, state["opt"]["mu"]),
+                        "nu": param_shardings(self.mesh, state["opt"]["nu"]),
+                        "step": NamedSharding(self.mesh, P())}}
+
+    def batch_sharding(self, batch):
+        assert self.mesh is not None
+        dp = dp_axes(self.mesh)
+        def spec(x):
+            return NamedSharding(self.mesh, P(*( (dp,) + (None,) * (x.ndim - 1) )))
+        return jax.tree.map(spec, batch)
+
+    # ---- step ----
+    def _build_step(self):
+        model, opt_cfg, accum = self.model, self.opt_cfg, self.grad_accum
+
+        def loss_fn(params, batch):
+            loss, metrics = model.loss(params, batch)
+            return loss, metrics
+
+        def step(state, batch):
+            with use_mesh(self.mesh):
+                if accum > 1:
+                    def micro(carry, mb):
+                        g_acc, l_acc = carry
+                        (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                            state["params"], mb)
+                        return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), None
+                    mbs = jax.tree.map(
+                        lambda x: x.reshape(accum, x.shape[0] // accum,
+                                            *x.shape[1:]), batch)
+                    zeros = jax.tree.map(
+                        lambda p: jnp.zeros(p.shape, F32), state["params"])
+                    (grads, loss), _ = jax.lax.scan(micro, (zeros, 0.0), mbs)
+                    grads = jax.tree.map(lambda g: g / accum, grads)
+                    loss = loss / accum
+                    metrics = {}
+                else:
+                    (loss, metrics), grads = jax.value_and_grad(
+                        loss_fn, has_aux=True)(state["params"], batch)
+                new_params, new_opt, om = opt_lib.adamw_update(
+                    opt_cfg, grads, state["opt"], state["params"])
+                metrics = dict(metrics)
+                metrics.update(om)
+                metrics["loss"] = loss
+                return {"params": new_params, "opt": new_opt}, metrics
+
+        if self.mesh is not None:
+            self._step_fn = jax.jit(step, donate_argnums=(0,))
+        else:
+            self._step_fn = jax.jit(step, donate_argnums=(0,))
+        return self._step_fn
+
+    def train_step(self, state, batch):
+        if self._step_fn is None:
+            self._build_step()
+        if self.mesh is not None:
+            batch = jax.tree.map(jax.device_put, batch,
+                                 self.batch_sharding(batch))
+        return self._step_fn(state, batch)
+
+    # ---- loop with resume ----
+    def fit(self, source, steps: int, *, key=None, log_every: int = 10,
+            ckpt_every: int = 0, state=None, log=print) -> Dict[str, Any]:
+        key = key if key is not None else jax.random.PRNGKey(0)
+        start_step = 0
+        if state is None:
+            state = self.init_state(key)
+            if self.ckpt is not None and self.ckpt.latest_step() is not None:
+                start_step = self.ckpt.latest_step()
+                shards = (self.state_shardings(state)
+                          if self.mesh is not None else None)
+                state = self.ckpt.restore(start_step, state, shardings=shards)
+                log(f"[trainer] resumed from step {start_step}")
+        losses = []
+        for step in range(start_step, steps):
+            batch = source.batch_at(step)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            t0 = time.perf_counter()
+            state, metrics = self.train_step(state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self.monitor.record(0, dt)
+            losses.append(loss)
+            if log_every and (step + 1) % log_every == 0:
+                log(f"[trainer] step {step + 1} loss {loss:.4f} "
+                    f"({dt * 1e3:.1f} ms)")
+            if self.ckpt is not None and ckpt_every and \
+                    (step + 1) % ckpt_every == 0:
+                self.ckpt.save(step + 1, state)
+        if self.ckpt is not None:
+            self.ckpt.wait()
+        return {"state": state, "losses": losses}

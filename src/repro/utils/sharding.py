@@ -1,0 +1,132 @@
+"""Mesh context + path-rule based parameter/activation sharding.
+
+Parameter shardings are derived from tensor-name rules (Megatron-style 2D layout):
+vocab/ff/head dims over ``"model"``, batch over ``("pod","data")`` (dp), sequence over
+``"data"`` for long-context decode (SP).  All rules degrade to replication when the
+named mesh axis does not exist.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    prev = current_mesh()
+    _STATE.mesh = mesh
+    try:
+        yield
+    finally:
+        _STATE.mesh = prev
+
+
+def dp_axes(mesh: Mesh):
+    """The batch ("data-parallel") mesh axes: ('pod','data') when pods exist."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names) or None
+
+
+def mdl_axis(mesh: Mesh):
+    return "model" if "model" in mesh.axis_names else None
+
+
+def constrain(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint if a mesh is active, else identity.
+
+    spec entries: "dp" (batch axes), "model", "data", None.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    resolved = []
+    for s in spec:
+        if s == "dp":
+            resolved.append(dp_axes(mesh))
+        elif s in ("model", "data", "pod"):
+            resolved.append(s if s in mesh.axis_names else None)
+        else:
+            resolved.append(s)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved)))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules (matched against '/'-joined param paths)
+# ---------------------------------------------------------------------------
+# (regex, spec builder); specs are for the *unstacked* tensor — a leading layer-stack
+# dimension (from scan-over-layers) is detected by rank and padded with None.
+
+_RULES = [
+    # embeddings / lm head: (vocab, d) — shard vocab over model
+    (re.compile(r"(embed|lm_head|unembed)"), ("model", None)),
+    # MoE experts: (E, d, f) / (E, f, d) — expert-parallel over model
+    (re.compile(r"experts.*w_(gate|up)$"), ("model", None, None)),
+    (re.compile(r"experts.*w_down$"), ("model", None, None)),
+    (re.compile(r"router/w$"), (None, None)),
+    # attention projections
+    (re.compile(r"(wq|wk|wv|wqkv|q_b|kv_b|w_qkv)$"), (None, "model")),
+    (re.compile(r"(wo|out_proj)$"), ("model", None)),
+    (re.compile(r"(q_a|kv_a)$"), (None, None)),          # MLA low-rank: small, replicate
+    # mlp
+    (re.compile(r"(w_gate|w_up|w_in|in_proj)$"), (None, "model")),
+    (re.compile(r"(w_down|w_out|down_proj)$"), ("model", None)),
+    # mamba / xlstm projections
+    (re.compile(r"(conv_w|conv_b|a_log|dt_bias|d_skip)$"), None),
+    # biases on model-sharded outputs
+    (re.compile(r"(wq|wk|wv|w_gate|w_up|w_in)_b$"), ("model",)),
+]
+
+
+def spec_for_path(path: str, ndim: int) -> P:
+    for rx, spec in _RULES:
+        if rx.search(path):
+            if spec is None:
+                return P()
+            spec = tuple(spec)
+            if len(spec) < ndim:                       # layer-stacked: pad left
+                spec = (None,) * (ndim - len(spec)) + spec
+            elif len(spec) > ndim:
+                spec = spec[-ndim:]
+            return P(*spec)
+    return P()                                          # norms, scalars: replicate
+
+
+def _path_str(kp) -> str:
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_specs(params) -> dict:
+    """PartitionSpec pytree for a param pytree, by path rules."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, x: spec_for_path(_path_str(kp), jnp.ndim(x)), params)
+
+
+def param_shardings(mesh: Mesh, params):
+    def fix(spec):
+        # drop axes that don't exist in this mesh
+        cleaned = tuple(a if (a is None or a in mesh.axis_names) else None
+                        for a in spec)
+        return NamedSharding(mesh, P(*cleaned))
+    return jax.tree.map(fix, param_specs(params),
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,165 @@
+"""Distributed behaviour on 8 host devices (subprocess: device count is locked at
+jax init, so each test spawns a fresh interpreter with XLA_FLAGS set)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def run_sub(code: str, timeout=520):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout, env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def test_mcscan_multi_device():
+    run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import AxisType
+        from repro.core import mcscan
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
+        rng = np.random.default_rng(1)
+        x = rng.standard_normal((2, 4096)).astype(np.float32)
+        out = mcscan(jnp.asarray(x), mesh, "data", batch_axis_name="model")
+        np.testing.assert_allclose(np.asarray(out), np.cumsum(x, -1),
+                                   rtol=1e-4, atol=1e-3)
+        m = (rng.random((1, 8192)) < 0.5).astype(np.int8)
+        om = mcscan(jnp.asarray(m), mesh, "data")
+        assert om.dtype == jnp.int32
+        np.testing.assert_array_equal(np.asarray(om),
+                                      np.cumsum(m.astype(np.int32), -1))
+        # the distributed scan must move exactly ONE small all-gather
+        f = jax.jit(lambda a: mcscan(a, mesh, "data"))
+        txt = f.lower(jnp.asarray(x)).compile().as_text()
+        ag = [l for l in txt.splitlines() if "= " in l and "all-gather(" in l]
+        assert len(ag) == 1, ag
+        print("MCSCAN-8DEV-OK")
+        """)
+
+
+def test_data_parallel_training_step():
+    run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.launch.mesh import make_debug_mesh
+        from repro.models.model import get_config
+        from repro.training.trainer import Trainer
+        from repro.training.optimizer import AdamWConfig
+        from repro.data.pipeline import SyntheticLM
+        cfg = get_config("qwen3-4b", smoke=True)
+        mesh = make_debug_mesh()                       # (4 data, 2 model)
+        tr = Trainer(cfg, AdamWConfig(lr=1e-3), mesh=mesh)
+        src = SyntheticLM(cfg.vocab_size, 32, 8)
+        state = tr.init_state(jax.random.PRNGKey(0))
+        batch = {k: jnp.asarray(v) for k, v in src.batch_at(0).items()}
+        l0 = None
+        for i in range(3):
+            state, m = tr.train_step(state, batch)
+            l0 = l0 or float(m["loss"])
+        assert float(m["loss"]) < l0
+        # single-device run must produce the same first-step loss
+        tr1 = Trainer(cfg, AdamWConfig(lr=1e-3))
+        s1 = tr1.init_state(jax.random.PRNGKey(0))
+        _, m1 = tr1.train_step(s1, batch)
+        print("LOSSES", float(m1["loss"]), l0)
+        np.testing.assert_allclose(float(m1["loss"]), l0, rtol=1e-3)
+        print("DP-TRAIN-OK")
+        """)
+
+
+def test_checkpoint_reshard_elastic():
+    run_sub("""
+        import tempfile, numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+        from repro.training.checkpoint import CheckpointManager
+        mesh8 = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+        mesh2 = jax.make_mesh((2, 2), ("data", "model"),
+                              axis_types=(AxisType.Auto,) * 2)
+        x = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
+        tree = {"w": jax.device_put(x, NamedSharding(mesh8, P("data", None)))}
+        with tempfile.TemporaryDirectory() as d:
+            cm = CheckpointManager(d, async_save=False)
+            cm.save(1, tree, blocking=True)
+            # elastic restart: restore on a DIFFERENT mesh layout
+            shards = {"w": NamedSharding(mesh2, P("model", "data"))}
+            out = cm.restore(1, tree, shardings=shards)
+            np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(x))
+            assert out["w"].sharding.spec == P("model", "data")
+        print("RESHARD-OK")
+        """)
+
+
+def test_compressed_gradient_allreduce():
+    run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import AxisType, PartitionSpec as P
+        from repro.training.grad_compression import (compressed_psum,
+                                                     quantize_int8,
+                                                     dequantize_int8)
+        mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+        rng = np.random.default_rng(0)
+        g = rng.standard_normal((8, 64)).astype(np.float32)
+        def body(gl, el):
+            return compressed_psum(gl, "data", el)
+        out, err = jax.shard_map(body, mesh=mesh,
+                                 in_specs=(P("data", None), P("data", None)),
+                                 out_specs=(P(), P("data", None)))(
+            jnp.asarray(g), jnp.zeros_like(jnp.asarray(g)))
+        out = np.asarray(out)[0]
+        ref = g.mean(0)
+        # int8 quantisation: within ~1% of the fp32 mean gradient
+        err_rel = np.abs(np.asarray(out) - ref).max() / np.abs(ref).max()
+        assert err_rel < 0.05, err_rel
+        # error feedback: quant error is retained locally, not lost
+        q, s = quantize_int8(jnp.asarray(g[0]))
+        np.testing.assert_allclose(
+            np.asarray(dequantize_int8(q, s) + (jnp.asarray(g[0]) - dequantize_int8(q, s))),
+            g[0], rtol=1e-6)
+        print("COMPRESS-OK")
+        """)
+
+
+def test_moe_ep_shard_map_matches_local():
+    """The explicit expert-parallel shard_map MoE (EXPERIMENTS §Perf I9) must be
+    numerically identical to the meshless local dispatch."""
+    run_sub("""
+        import numpy as np, jax
+        from repro.launch.mesh import make_debug_mesh
+        from repro.models.model import get_config, build_model, synth_batch
+        from repro.configs.base import SMOKE_SHAPE
+        from repro.utils.sharding import use_mesh
+        cfg = get_config("deepseek-moe-16b", smoke=True)
+        m = build_model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        batch = synth_batch(cfg, SMOKE_SHAPE, jax.random.PRNGKey(1))
+        ref = np.asarray(m.forward(params, batch), np.float32)
+        mesh = make_debug_mesh()
+        with use_mesh(mesh):
+            out = np.asarray(jax.jit(m.forward)(params, batch), np.float32)
+        err = np.abs(out - ref).max()
+        assert err < 2e-2, err
+        print("EP-MATCH-OK")
+        """)
+
+
+def test_dryrun_debug_mesh_cells():
+    out = run_sub("""
+        import sys
+        sys.argv = ["dryrun", "--arch", "gemma2-2b", "--shape", "decode_32k",
+                    "--mesh", "both", "--debug-mesh"]
+        import runpy
+        try:
+            runpy.run_module("repro.launch.dryrun", run_name="__main__")
+        except SystemExit as e:
+            assert e.code == 0, "dryrun failed"
+        print("DRYRUN-DEBUG-OK")
+        """, timeout=560)
+    assert "DRYRUN-DEBUG-OK" in out

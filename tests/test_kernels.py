@@ -1,0 +1,66 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True shape/dtype sweeps)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import scan_kernel, ssd_kernel
+from repro.kernels.ref import scan_ref, ssd_ref
+
+
+@pytest.mark.parametrize("s", [8, 32, 128])
+@pytest.mark.parametrize("n", [64, 777, 5000])
+@pytest.mark.parametrize("dtype", ["float32", "int8", "int32", "bfloat16"])
+def test_scan_kernel_sweep(s, n, dtype):
+    rng = np.random.default_rng(s * n)
+    if dtype in ("int8", "int32"):
+        hi = 3 if dtype == "int8" else 100
+        x = jnp.asarray(rng.integers(-hi, hi + 1, n), dtype)
+    else:
+        x = jnp.asarray(rng.standard_normal(n), dtype)
+    out = scan_kernel(x, s=s)
+    ref = scan_ref(x)
+    assert out.dtype == ref.dtype
+    tol = 2e-1 if dtype == "bfloat16" else 1e-3
+    np.testing.assert_allclose(np.asarray(out, np.float64),
+                               np.asarray(ref, np.float64), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("variant", ["scanu", "scanul1"])
+def test_scan_kernel_variants_batched(variant):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((3, 700)), jnp.float32)
+    out = scan_kernel(x, s=16, variant=variant)
+    np.testing.assert_allclose(np.asarray(out), np.cumsum(np.asarray(x), -1),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_scan_kernel_carry_across_many_tiles():
+    """The SMEM 'partial' must thread through a long grid."""
+    x = jnp.ones((2, 8 * 8 * 40), jnp.float32)
+    out = scan_kernel(x, s=8)
+    np.testing.assert_allclose(np.asarray(out)[:, -1], 8 * 8 * 40)
+
+
+@pytest.mark.parametrize("shape", [(1, 64, 1, 4, 2), (2, 96, 3, 8, 4),
+                                   (1, 250, 2, 16, 8)])
+def test_ssd_kernel_sweep(shape):
+    b, s, h, p, n = shape
+    rng = np.random.default_rng(s)
+    x = jnp.asarray(rng.standard_normal((b, s, h, p)), jnp.float32)
+    a = jnp.asarray(-np.abs(rng.standard_normal((b, s, h)) * 0.1), jnp.float32)
+    bm = jnp.asarray(rng.standard_normal((b, s, h, n)) * 0.3, jnp.float32)
+    cm = jnp.asarray(rng.standard_normal((b, s, h, n)) * 0.3, jnp.float32)
+    out = ssd_kernel(x, a, bm, cm, chunk=32)
+    ref = ssd_ref(x, a, bm, cm)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_kernel_route_via_core_api():
+    from repro.core import scan
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal(999), jnp.float32)
+    out = scan(x, method="kernel", tile_s=16)
+    np.testing.assert_allclose(np.asarray(out), np.cumsum(np.asarray(x)),
+                               rtol=1e-4, atol=1e-3)

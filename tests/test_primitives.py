@@ -1,0 +1,130 @@
+"""Scan-based operators (paper §5): split, compress, radix sort, top-k, top-p,
+weighted sampling."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (compress, radix_sort, split, top_p_sample, topk,
+                        weighted_sample)
+
+
+def test_split_stable_with_indices():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(1000).astype(np.float32)
+    f = rng.random(1000) < 0.4
+    z, ind, nt = split(jnp.asarray(x), jnp.asarray(f))
+    nt = int(nt)
+    assert nt == f.sum()
+    np.testing.assert_allclose(np.asarray(z)[:nt], x[f])
+    np.testing.assert_allclose(np.asarray(z)[nt:], x[~f])
+    np.testing.assert_array_equal(np.asarray(ind)[:nt], np.nonzero(f)[0])
+    np.testing.assert_array_equal(np.asarray(ind)[nt:], np.nonzero(~f)[0])
+
+
+def test_split_batched():
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((4, 200)).astype(np.float32)
+    f = rng.random((4, 200)) < 0.5
+    z, ind, nt = split(jnp.asarray(x), jnp.asarray(f))
+    for b in range(4):
+        n = int(nt[b])
+        np.testing.assert_allclose(np.asarray(z)[b, :n], x[b][f[b]])
+
+
+def test_compress_matches_masked_select():
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal(517).astype(np.float32)
+    m = rng.random(517) < 0.3
+    vals, cnt = compress(jnp.asarray(x), jnp.asarray(m))
+    np.testing.assert_allclose(np.asarray(vals)[:int(cnt)], x[m])
+    assert np.all(np.asarray(vals)[int(cnt):] == 0)
+
+
+@pytest.mark.parametrize("dtype", [np.float16, np.float32, np.int32, np.int16,
+                                   np.uint16, np.int8])
+def test_radix_sort_dtypes(dtype):
+    rng = np.random.default_rng(3)
+    if np.issubdtype(dtype, np.floating):
+        x = rng.standard_normal(800).astype(dtype)
+    else:
+        info = np.iinfo(dtype)
+        x = rng.integers(info.min, info.max, 800).astype(dtype)
+    v, idx = radix_sort(jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(v), np.sort(x, kind="stable"))
+    np.testing.assert_array_equal(x[np.asarray(idx)], np.asarray(v))
+
+
+def test_radix_sort_descending_and_special_values():
+    x = np.asarray([0.0, -0.5, 2.5, -3.25, 1.0, 65504.0, -65504.0, 0.125],
+                   np.float16)
+    vd, _ = radix_sort(jnp.asarray(x), descending=True)
+    np.testing.assert_array_equal(np.asarray(vd), np.sort(x)[::-1])
+
+
+def test_radix_sort_stability():
+    """Equal keys keep input order (required by the paper's SplitInd semantics)."""
+    x = np.asarray([3, 1, 3, 1, 2, 2, 1], np.int32)
+    _, idx = radix_sort(jnp.asarray(x))
+    ones = np.asarray(idx)[:3]
+    np.testing.assert_array_equal(ones, [1, 3, 6])
+
+
+def test_topk():
+    rng = np.random.default_rng(4)
+    x = rng.standard_normal(512).astype(np.float16)
+    v, i = topk(jnp.asarray(x), 16)
+    np.testing.assert_array_equal(np.asarray(v), np.sort(x)[::-1][:16])
+    np.testing.assert_array_equal(x[np.asarray(i)], np.asarray(v))
+
+
+def test_weighted_sample_distribution():
+    w = jnp.asarray([1.0, 0.0, 3.0, 0.0])
+    keys = jax.random.split(jax.random.PRNGKey(0), 3000)
+    s = np.asarray(jax.vmap(lambda k: weighted_sample(w, k))(keys))
+    counts = np.bincount(s, minlength=4)
+    assert counts[1] == 0 and counts[3] == 0
+    assert abs(counts[2] / 3000 - 0.75) < 0.04
+
+
+def test_top_p_restricts_to_nucleus():
+    # one dominant token: p=0.5 nucleus is exactly {argmax}
+    logits = jnp.asarray(np.r_[10.0, np.zeros(63)], jnp.float32)[None, :]
+    keys = jax.random.split(jax.random.PRNGKey(1), 50)
+    toks = np.asarray(jax.vmap(
+        lambda k: top_p_sample(logits, k, p=0.5))(keys))
+    assert np.all(toks == 0)
+
+
+def test_top_p_batched_scan_vs_xla_sort():
+    rng = np.random.default_rng(5)
+    logits = jnp.asarray(rng.standard_normal((8, 128)) * 2, jnp.float32)
+    k = jax.random.PRNGKey(2)
+    a = top_p_sample(logits, k, p=0.9, sort_method="radix")
+    b = top_p_sample(logits, k, p=0.9, sort_method="xla")
+    # same key, same nucleus -> overwhelmingly the same samples (bf16 key ties
+    # can reorder within ~1-ulp probability bands)
+    assert np.mean(np.asarray(a) == np.asarray(b)) > 0.7
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 1), min_size=1, max_size=300))
+def test_property_split_partition(flags):
+    f = np.asarray(flags, bool)
+    x = np.arange(len(f), dtype=np.float32)
+    z, ind, nt = split(jnp.asarray(x), jnp.asarray(f))
+    nt = int(nt)
+    assert nt == f.sum()
+    # output is a permutation that is stable within each class
+    np.testing.assert_allclose(np.sort(np.asarray(z)), x)
+    np.testing.assert_array_equal(np.asarray(z)[:nt], x[f])
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.floats(-100, 100, allow_nan=False, width=16),
+                min_size=1, max_size=200))
+def test_property_radix_sort(xs):
+    x = np.asarray(xs, np.float16)
+    v, _ = radix_sort(jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(v), np.sort(x, kind="stable"))

@@ -1,0 +1,108 @@
+"""Core matmul-scan correctness: paper Alg. 1 (ScanU), Alg. 2/Eq. 1 (ScanUL1),
+multi-level blocking, dtype specializations, exclusive/reverse/axis handling."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import scan, tile_scan_scanu, tile_scan_scanul1, upper_ones
+
+
+@pytest.mark.parametrize("variant", ["scanu", "scanul1"])
+@pytest.mark.parametrize("n", [1, 2, 17, 128, 1000, 16384, 40000])
+@pytest.mark.parametrize("s", [8, 32, 128])
+def test_scan_matches_cumsum(variant, n, s):
+    rng = np.random.default_rng(n * s)
+    x = rng.standard_normal(n).astype(np.float32)
+    out = scan(jnp.asarray(x), method="matmul", variant=variant, tile_s=s)
+    np.testing.assert_allclose(np.asarray(out), np.cumsum(x),
+                               rtol=2e-4, atol=2e-3)
+
+
+@pytest.mark.parametrize("variant", ["scanu", "scanul1"])
+def test_tile_identities(variant):
+    """Eq. 1: scan(z) = A@U + L⁻@A@1 for a single s² tile."""
+    rng = np.random.default_rng(0)
+    s = 16
+    a = jnp.asarray(rng.standard_normal((3, s, s)), jnp.float32)
+    fn = tile_scan_scanu if variant == "scanu" else tile_scan_scanul1
+    out = fn(a)
+    ref = np.cumsum(np.asarray(a).reshape(3, s * s), axis=1).reshape(3, s, s)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4, atol=1e-3)
+
+
+def test_int8_mask_scan_accumulates_int32():
+    """The paper's int8 -> int32 cube-unit specialization."""
+    rng = np.random.default_rng(1)
+    m = (rng.random(5000) < 0.3).astype(np.int8)
+    out = scan(jnp.asarray(m), method="matmul", tile_s=32)
+    assert out.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(out), np.cumsum(m.astype(np.int32)))
+
+
+def test_bf16_accumulates_f32():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal(512), jnp.bfloat16)
+    out = scan(x, method="matmul", tile_s=16)
+    assert out.dtype == jnp.float32
+
+
+def test_exclusive_reverse_axis_batched():
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((3, 257)).astype(np.float32)
+    ex = np.concatenate([np.zeros((3, 1)), np.cumsum(x, 1)[:, :-1]], 1)
+    np.testing.assert_allclose(
+        np.asarray(scan(jnp.asarray(x), exclusive=True, tile_s=16)), ex,
+        rtol=1e-4, atol=1e-4)
+    rev = np.flip(np.cumsum(np.flip(x, 1), 1), 1)
+    np.testing.assert_allclose(
+        np.asarray(scan(jnp.asarray(x), reverse=True, tile_s=16)), rev,
+        rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(scan(jnp.asarray(x), axis=0, tile_s=16)), np.cumsum(x, 0),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_vector_baseline_agrees():
+    rng = np.random.default_rng(4)
+    x = rng.standard_normal(777).astype(np.float32)
+    a = scan(jnp.asarray(x), method="vector")
+    b = scan(jnp.asarray(x), method="matmul", tile_s=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-3)
+
+
+# ---- property-based: scan is the discrete integral (hypothesis) ----
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                min_size=1, max_size=600),
+       st.sampled_from([8, 16, 128]),
+       st.sampled_from(["scanu", "scanul1"]))
+def test_property_matches_numpy(xs, s, variant):
+    x = np.asarray(xs, np.float32)
+    out = np.asarray(scan(jnp.asarray(x), method="matmul", variant=variant,
+                          tile_s=s))
+    np.testing.assert_allclose(out, np.cumsum(x.astype(np.float64)),
+                               rtol=1e-3, atol=1e-2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(-5, 5), min_size=1, max_size=500))
+def test_property_int_exact(xs):
+    x = np.asarray(xs, np.int32)
+    out = np.asarray(scan(jnp.asarray(x), method="matmul", tile_s=16))
+    np.testing.assert_array_equal(out, np.cumsum(x))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(-10, 10, allow_nan=False, width=32),
+                min_size=2, max_size=300))
+def test_property_exclusive_shift(xs):
+    """exclusive scan == inclusive scan shifted right with 0 prepended."""
+    x = jnp.asarray(np.asarray(xs, np.float32))
+    inc = np.asarray(scan(x, tile_s=16))
+    exc = np.asarray(scan(x, exclusive=True, tile_s=16))
+    np.testing.assert_allclose(exc[1:], inc[:-1], rtol=1e-5, atol=1e-5)
+    assert exc[0] == 0.0
