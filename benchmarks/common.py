@@ -1,10 +1,20 @@
-"""Benchmark timing helpers (CPU host timings; bandwidth derived as bytes/time)."""
+"""Benchmark timing helpers (CPU host timings; bandwidth derived as bytes/time).
+
+Rows are printed as CSV and collected in memory; ``dump_json`` writes one
+``BENCH_<section>.json`` per section (section = first path component of the row
+name), which CI uploads as the perf-trajectory artifact.
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
+from typing import Dict, List
 
 import jax
 import numpy as np
+
+_ROWS: List[Dict] = []
 
 
 def timeit(fn, *args, repeats: int = 5, warmup: int = 2):
@@ -23,3 +33,20 @@ def timeit(fn, *args, repeats: int = 5, warmup: int = 2):
 
 def row(name: str, seconds: float, derived: str = ""):
     print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+    _ROWS.append({"name": name, "us_per_call": round(seconds * 1e6, 1),
+                  "derived": derived})
+
+
+def dump_json(out_dir: str) -> List[str]:
+    """Write collected rows as BENCH_<section>.json files; returns the paths."""
+    os.makedirs(out_dir, exist_ok=True)
+    by_section: Dict[str, List[Dict]] = {}
+    for r in _ROWS:
+        by_section.setdefault(r["name"].split("/")[0], []).append(r)
+    paths = []
+    for section, rows in sorted(by_section.items()):
+        path = os.path.join(out_dir, f"BENCH_{section}.json")
+        with open(path, "w") as fh:
+            json.dump(rows, fh, indent=1)
+        paths.append(path)
+    return paths

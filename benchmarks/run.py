@@ -28,14 +28,18 @@ import jax.numpy as jnp
 import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.common import row, timeit  # noqa: E402
+from benchmarks.common import dump_json, row, timeit  # noqa: E402
 from repro.core import scan  # noqa: E402
-from repro.core.primitives import (compress, radix_sort,  # noqa: E402
+from repro.core.primitives import (compress, radix_sort, split,  # noqa: E402
                                    top_p_sample)
 
 QUICK_LENS = [4096, 65536, 1 << 20]
 FULL_LENS = [4096, 65536, 1 << 20, 1 << 23]
+SMOKE_LENS = [2048, 16384]
+
+OP_METHODS = ("vector", "matmul", "kernel")
 
 
 def fig3_single_scan(lens):
@@ -76,10 +80,10 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys, time, functools
 import numpy as np, jax, jax.numpy as jnp
-from jax.sharding import AxisType
 sys.path.insert(0, {src!r})
 from repro.core import mcscan
-mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+from repro.utils.compat import make_mesh
+mesh = make_mesh((8,), ("data",))
 for spec in {specs!r}:
     n, s, dt = spec
     dtype = jnp.int8 if dt == "int8" else (jnp.bfloat16 if dt == "bf16" else jnp.float32)
@@ -150,8 +154,6 @@ def fig10_compress(lens):
         x = jnp.asarray(rng.standard_normal(n), jnp.float32)
         m = jnp.asarray(rng.random(n) < 0.5)
         ours = jax.jit(lambda a, f: compress(a, f)[0])
-        base = jax.jit(lambda a, f: jnp.where(
-            jnp.cumsum(f) * 0 + f, a, 0.0))   # masked zeroing (no compaction)
         base2 = jax.jit(lambda a, f: a[jnp.nonzero(f, size=n)[0]])
         t_ours = timeit(ours, x, m)
         t_nz = timeit(base2, x, m)
@@ -200,13 +202,83 @@ def fig13_top_p(quick=True):
             f"baseline_us={t_base * 1e6:.1f};scans_per_batch=17")
 
 
+# ---------------------------------------------------------------------------
+# Operator benchmarks: split / sort / top-p across methods and dtypes
+# (tracks the fused-kernel trajectory, not just raw scan — ISSUE 1 tentpole)
+# ---------------------------------------------------------------------------
+
+_OP_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "int8": jnp.int8}
+
+
+def _op_payload(dtype_name, shape, seed=0):
+    rng = np.random.default_rng(seed)
+    if dtype_name == "int8":
+        return jnp.asarray(rng.integers(-128, 128, shape), jnp.int8)
+    return jnp.asarray(rng.standard_normal(shape), _OP_DTYPES[dtype_name])
+
+
+def ops_split(n: int):
+    """SplitInd across methods × payload dtypes (kernel = fused Pallas launch)."""
+    f = jnp.asarray(np.random.default_rng(1).random(n) < 0.5)
+    for dt in _OP_DTYPES:
+        x = _op_payload(dt, n)
+        base = None
+        for m in OP_METHODS:
+            fn = jax.jit(lambda a, fl, m=m: split(a, fl, method=m)[0])
+            t = timeit(fn, x, f, repeats=3, warmup=1)
+            base = base or t
+            row(f"ops/split/{dt}/n={n}/{m}", t,
+                f"speedup_vs_vector={base / t:.2f}x")
+
+
+def ops_sort(n: int, dtypes=("bfloat16", "float32")):
+    """Radix sort (16/32 fused passes) across methods × key widths."""
+    for dt in dtypes:
+        x = _op_payload(dt, n, seed=2)
+        bits = 16 if dt == "bfloat16" else 32
+        base = None
+        for m in OP_METHODS:
+            fn = jax.jit(lambda a, m=m: radix_sort(a, method=m)[0])
+            t = timeit(fn, x, repeats=3, warmup=1)
+            base = base or t
+            row(f"ops/sort/{dt}/n={n}/{m}", t,
+                f"bits={bits};speedup_vs_vector={base / t:.2f}x")
+
+
+def ops_top_p(vocab: int, batch: int = 4):
+    """Nucleus sampling across methods (kernel = fused radix + one-launch tail)."""
+    logits = jnp.asarray(
+        np.random.default_rng(3).standard_normal((batch, vocab)) * 3,
+        jnp.float32)
+    key = jax.random.PRNGKey(0)
+    base = None
+    for m in OP_METHODS:
+        fn = jax.jit(lambda l, k, m=m: top_p_sample(l, k, p=0.9, method=m))
+        t = timeit(fn, logits, key, repeats=3, warmup=1)
+        base = base or t
+        row(f"ops/top_p/b={batch}/v={vocab}/{m}", t,
+            f"speedup_vs_vector={base / t:.2f}x")
+
+
+def ops_operators(smoke: bool):
+    n = 2048 if smoke else 16384
+    ops_split(n)
+    ops_sort(n // 2 if smoke else n, dtypes=("bfloat16",) if smoke
+             else ("bfloat16", "float32"))
+    ops_top_p(1024 if smoke else 16384, batch=2 if smoke else 4)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="larger sizes")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes + fast sections only (CI)")
     ap.add_argument("--only", default=None,
-                    help="comma list of fig ids, e.g. fig3,fig11")
+                    help="comma list of section ids, e.g. fig3,ops")
+    ap.add_argument("--json-out", default=None, metavar="DIR",
+                    help="write BENCH_<section>.json row files to DIR")
     args = ap.parse_args()
-    lens = FULL_LENS if args.full else QUICK_LENS
+    lens = SMOKE_LENS if args.smoke else (FULL_LENS if args.full else QUICK_LENS)
     sections = {
         "fig3": lambda: fig3_single_scan(lens),
         "fig5": fig5_batched_ratio,
@@ -215,13 +287,19 @@ def main() -> None:
         "fig11": lambda: fig11_radix_sort(lens[:2]),
         "fig12": fig12_batched_bandwidth,
         "fig13": lambda: fig13_top_p(quick=not args.full),
+        "ops": lambda: ops_operators(smoke=args.smoke),
     }
     only = set(args.only.split(",")) if args.only else None
+    if args.smoke and only is None:
+        only = {"fig3", "fig10", "fig11", "ops"}      # fast, single-process
     print("name,us_per_call,derived")
     for name, fn in sections.items():
         if only and name not in only:
             continue
         fn()
+    if args.json_out:
+        for p in dump_json(args.json_out):
+            print(f"# wrote {p}", flush=True)
 
 
 if __name__ == "__main__":

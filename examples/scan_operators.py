@@ -7,7 +7,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import scan, split, compress, radix_sort, topk, weighted_sample
+from repro.core import scan, split, compress, topk, weighted_sample
 
 rng = np.random.default_rng(0)
 
@@ -40,3 +40,8 @@ print("weighted samples (support 100k):", np.asarray(samples))
 x = jnp.arange(10, dtype=jnp.float32)
 z, ind, nt = split(x, x % 3 == 0)
 print("split([0..9], %3==0):", np.asarray(z).astype(int), "n_true =", int(nt))
+
+# --- the same split as ONE fused Pallas launch (interpret mode off-TPU) ---
+zk, indk, ntk = split(x, x % 3 == 0, method="kernel")
+assert np.array_equal(np.asarray(z), np.asarray(zk))
+print("split(method='kernel') matches — mask scan + scatter fused in VMEM")

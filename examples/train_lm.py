@@ -8,7 +8,6 @@ Re-running the same command resumes from the latest checkpoint (restart-safe
 pipeline) — kill it mid-run to see fault tolerance in action.
 """
 import argparse
-import dataclasses
 
 import jax
 import numpy as np

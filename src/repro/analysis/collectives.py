@@ -8,10 +8,8 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 """
 import argparse
 import collections
-import re
 
-from repro.analysis.roofline import _OP_RE, _SHAPE_RE, _GROUPS_RE, \
-    _GROUPS_IOTA_RE, _shape_bytes, parse_collectives
+from repro.analysis.roofline import _OP_RE, parse_collectives
 from repro.launch.dryrun import lower_cell
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
 

@@ -30,8 +30,9 @@ def load(d, prefer: str = "experiments/final"):
                 continue
             by_cell[(r["arch"], r["shape"], r["mesh"])] = r
     recs = list(by_cell.values())
-    key = lambda r: (ARCH_ORDER.index(r["arch"]) if r["arch"] in ARCH_ORDER
-                     else 99, SHAPE_ORDER.index(r["shape"]), r["mesh"])
+    def key(r):
+        return (ARCH_ORDER.index(r["arch"]) if r["arch"] in ARCH_ORDER
+                else 99, SHAPE_ORDER.index(r["shape"]), r["mesh"])
     return sorted(recs, key=key)
 
 

@@ -17,7 +17,6 @@ by the ring-traffic factor of the op kind.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Dict, List, Optional
 
@@ -114,6 +113,8 @@ class Roofline:
 
 def analyze(compiled, *, chips: int = 1) -> Roofline:
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # jax 0.4.x: one dict per program
+        cost = cost[0] if cost else {}
     flops = float(cost.get("flops", 0.0))
     hbm = float(cost.get("bytes accessed", 0.0))
     colls = parse_collectives(compiled.as_text())

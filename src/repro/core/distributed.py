@@ -21,7 +21,9 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.utils.compat import axis_size, shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.scan import scan as _scan, accum_dtype_for
 
@@ -46,7 +48,7 @@ def mcscan_local(
     # Phase 1 "vector units": recomputed block reduction, independent of the scan.
     r_local = jnp.sum(x.astype(acc), axis=-1)
     r = jax.lax.all_gather(r_local, axis_name)              # (B, ...) block sums
-    num_blocks = jax.lax.axis_size(axis_name)
+    num_blocks = axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     before = (jnp.arange(num_blocks) < idx).astype(acc)
     offset = jnp.tensordot(before, r.astype(acc), axes=(0, 0))   # exclusive block prefix
@@ -92,5 +94,5 @@ def mcscan(
             exclusive=exclusive, accum_dtype=accum_dtype,
         )
 
-    fn = jax.shard_map(body, mesh=mesh, in_specs=pspec, out_specs=pspec)
+    fn = shard_map(body, mesh=mesh, in_specs=pspec, out_specs=pspec)
     return fn(x)

@@ -1,16 +1,25 @@
 """Scan-based operators (paper §5): split, compress, radix sort, top-k, top-p,
 weighted sampling.
 
-All of them bottom out in ``repro.core.scan.scan`` — pass ``method=`` through to pick
-the paper's matmul scan (default), the vector baseline, or the Pallas kernel.
+Every operator takes ``method=`` and routes through one dispatch table:
 
-Shapes are static (JAX): operators that logically return a variable number of elements
-(compress/split) return a full-size array plus a count, with the tail filled.
+* ``"matmul"`` — the paper's cube-unit scan (ScanU/ScanUL1) feeding unfused
+  JAX gather/scatter (default).
+* ``"vector"`` — the plain ``jnp.cumsum`` vector baseline, same surrounding ops.
+* ``"kernel"`` — the fused Pallas kernels (``repro.kernels.split_mm``): mask
+  scan, offsets and permutation in a single launch per batch row.
+
+The ``"kernel"`` path is bit-identical to ``"vector"`` for split / compress /
+radix_sort / sort / topk / top_p_sample (integer offsets are exact; the fused
+top-p tail keeps its prefix sums on the VPU cumsum).
+
+Shapes are static (JAX): operators that logically return a variable number of
+elements (compress/split) return a full-size array plus a count, with the tail
+filled.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +29,35 @@ from repro.core.scan import scan
 __all__ = [
     "split", "compress", "radix_sort", "sort", "topk", "top_p_sample",
     "weighted_sample", "float_to_sortable_int", "sortable_int_to_float",
+    "dispatch", "METHODS",
 ]
+
+METHODS = ("matmul", "vector", "kernel")
+
+# Single dispatch table for the §5 operators: {op: {method: impl}}.  "matmul"
+# and "vector" share the unfused JAX implementations (the scan method differs
+# underneath); "kernel" entries are the fused Pallas launches, imported lazily
+# so importing repro.core never drags in pallas.
+_DISPATCH: Dict[str, Dict[str, Callable]] = {}
+
+
+def _register(op: str, *methods: str):
+    def deco(fn):
+        table = _DISPATCH.setdefault(op, {})
+        for m in methods:
+            table[m] = fn
+        return fn
+    return deco
+
+
+def dispatch(op: str, method: str) -> Callable:
+    """Look up the implementation of ``op`` for ``method`` (raises ValueError)."""
+    if method not in METHODS:
+        raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")
+    try:
+        return _DISPATCH[op][method]
+    except KeyError:
+        raise ValueError(f"operator {op!r} has no {method!r} implementation") from None
 
 
 # ---------------------------------------------------------------------------
@@ -28,17 +65,12 @@ __all__ = [
 # ---------------------------------------------------------------------------
 
 
-def split(x: jax.Array, flags: jax.Array, *, method: str = "matmul",
-          return_indices: bool = True):
-    """Stable partition (paper's SplitInd): flagged elements first, order preserved.
-
-    Returns ``(z, indices, n_true)``.  ``indices[j]`` is the original position of
-    ``z[j]``.  The destination offsets come from an exclusive scan of the int8 mask —
-    the paper's int8 -> int32 cube-unit mask-scan specialization.
-    """
+@_register("split", "matmul", "vector")
+def _split_unfused(x, flags, *, method, tile_s, interpret):
+    """SplitInd via ``scan`` + XLA scatter (the scanned mask lives in HBM)."""
     n = x.shape[-1]
-    f32m = flags.astype(jnp.int8)
-    ex = scan(f32m, axis=-1, exclusive=True, method=method)      # int32 positions
+    f8 = flags.astype(jnp.int8)
+    ex = scan(f8, axis=-1, exclusive=True, method=method, tile_s=tile_s)
     fl = flags.astype(jnp.int32)
     n_true = ex[..., -1] + fl[..., -1]
     iota = jnp.arange(n, dtype=jnp.int32)
@@ -59,18 +91,40 @@ def split(x: jax.Array, flags: jax.Array, *, method: str = "matmul",
         ind = ind.reshape(*batch, n)
     else:
         z, ind = scatter_1d(dest, x)
+    return z, ind, n_true
+
+
+@_register("split", "kernel")
+def _split_fused(x, flags, *, method, tile_s, interpret):
+    from repro.kernels import ops as _kops
+    return _kops.split_kernel(x, flags, s=tile_s, interpret=interpret)
+
+
+def split(x: jax.Array, flags: jax.Array, *, method: str = "matmul",
+          return_indices: bool = True, tile_s: int = 128,
+          interpret: Optional[bool] = None):
+    """Stable partition (paper's SplitInd): flagged elements first, order preserved.
+
+    Returns ``(z, indices, n_true)``.  ``indices[j]`` is the original position of
+    ``z[j]``.  The destination offsets come from an exclusive scan of the int8 mask —
+    the paper's int8 -> int32 cube-unit mask-scan specialization.
+    """
+    z, ind, n_true = dispatch("split", method)(
+        x, flags, method=method, tile_s=tile_s, interpret=interpret)
     if return_indices:
         return z, ind, n_true
     return z, n_true
 
 
 def compress(x: jax.Array, mask: jax.Array, *, method: str = "matmul",
-             fill_value=0) -> Tuple[jax.Array, jax.Array]:
+             fill_value=0, tile_s: int = 128,
+             interpret: Optional[bool] = None) -> Tuple[jax.Array, jax.Array]:
     """``masked_select``: gather elements where ``mask`` is true, packed left.
 
     Returns ``(values, count)``; ``values[count:]`` is ``fill_value``.
     """
-    z, _, n_true = split(x, mask, method=method)
+    z, _, n_true = split(x, mask, method=method, tile_s=tile_s,
+                         interpret=interpret)
     iota = jnp.arange(x.shape[-1], dtype=jnp.int32)
     keep = iota < n_true[..., None]
     z = jnp.where(keep, z, jnp.asarray(fill_value, z.dtype))
@@ -118,7 +172,7 @@ def sortable_int_to_float(u: jax.Array, dtype) -> jax.Array:
     raise TypeError(f"unsupported float dtype {dtype}")
 
 
-def _encode_for_sort(x: jax.Array) -> Tuple[jax.Array, int, callable]:
+def _encode_for_sort(x: jax.Array) -> Tuple[jax.Array, int, Callable]:
     dt = x.dtype
     if jnp.issubdtype(dt, jnp.floating):
         enc = float_to_sortable_int(x)
@@ -140,24 +194,43 @@ def _encode_for_sort(x: jax.Array) -> Tuple[jax.Array, int, callable]:
     raise TypeError(f"radix sort: unsupported dtype {dt}")
 
 
-def radix_sort(x: jax.Array, *, descending: bool = False, method: str = "matmul",
-               return_indices: bool = True):
-    """Stable LSB radix sort built on scan-based splits (paper §5).
-
-    One split per bit (16 for fp16, 32 for fp32), each using the int8 mask scan.
-    """
-    enc, bits, decode = _encode_for_sort(x)
-    if descending:
-        enc = ~enc  # complement keeps stability while reversing the order
-    n = x.shape[-1]
-    perm = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), x.shape).astype(jnp.int32)
+@_register("radix_passes", "matmul", "vector")
+def _radix_passes_unfused(enc, bits, *, method, tile_s, interpret):
+    """One ``split`` per bit; the permutation is composed with a gather."""
+    n = enc.shape[-1]
+    perm = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), enc.shape)
     work = enc
     one = jnp.asarray(1, enc.dtype)
     for b in range(bits):
         bit = (work >> b) & one
         flags = bit == 0                     # zeros first (LSB ascending pass)
-        work, ind, _ = split(work, flags, method=method)
+        work, ind, _ = split(work, flags, method=method, tile_s=tile_s,
+                             interpret=interpret)
         perm = jnp.take_along_axis(perm, ind, axis=-1)
+    return work, perm
+
+
+@_register("radix_passes", "kernel")
+def _radix_passes_fused(enc, bits, *, method, tile_s, interpret):
+    from repro.kernels import ops as _kops
+    return _kops.radix_sort_enc_kernel(enc, bits=bits, s=tile_s,
+                                       interpret=interpret)
+
+
+def radix_sort(x: jax.Array, *, descending: bool = False, method: str = "matmul",
+               return_indices: bool = True, tile_s: int = 128,
+               interpret: Optional[bool] = None):
+    """Stable LSB radix sort built on scan-based splits (paper §5).
+
+    One split per bit (16 for fp16, 32 for fp32), each using the int8 mask scan;
+    ``method="kernel"`` chains digit extraction, the matmul split and the
+    permutation inside one fused ``radix_pass`` launch per bit.
+    """
+    enc, bits, decode = _encode_for_sort(x)
+    if descending:
+        enc = ~enc  # complement keeps stability while reversing the order
+    work, perm = dispatch("radix_passes", method)(
+        enc, bits, method=method, tile_s=tile_s, interpret=interpret)
     if descending:
         work = ~work
     values = decode(work)
@@ -166,9 +239,11 @@ def radix_sort(x: jax.Array, *, descending: bool = False, method: str = "matmul"
     return values
 
 
-def sort(x: jax.Array, *, descending: bool = False, method: str = "matmul"):
+def sort(x: jax.Array, *, descending: bool = False, method: str = "matmul",
+         tile_s: int = 128, interpret: Optional[bool] = None):
     """PyTorch-style ``sort`` returning (values, indices); radix under the hood."""
-    return radix_sort(x, descending=descending, method=method, return_indices=True)
+    return radix_sort(x, descending=descending, method=method,
+                      return_indices=True, tile_s=tile_s, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -176,14 +251,17 @@ def sort(x: jax.Array, *, descending: bool = False, method: str = "matmul"):
 # ---------------------------------------------------------------------------
 
 
-def topk(x: jax.Array, k: int, *, method: str = "matmul"):
+def topk(x: jax.Array, k: int, *, method: str = "matmul", tile_s: int = 128,
+         interpret: Optional[bool] = None):
     """Top-k via descending radix sort (paper §5 implements it over SplitInd)."""
-    values, idx = radix_sort(x, descending=True, method=method)
+    values, idx = radix_sort(x, descending=True, method=method, tile_s=tile_s,
+                             interpret=interpret)
     return values[..., :k], idx[..., :k]
 
 
 def weighted_sample(w: jax.Array, key: jax.Array, *, method: str = "matmul",
-                    cdf: Optional[jax.Array] = None) -> jax.Array:
+                    cdf: Optional[jax.Array] = None,
+                    tile_s: int = 128) -> jax.Array:
     """Inverse-transform sampling on the scanned CDF (paper §5).
 
     The paper invokes SplitInd with predicate ``scan(w) > θ·Σw`` and reads the last
@@ -191,21 +269,40 @@ def weighted_sample(w: jax.Array, key: jax.Array, *, method: str = "matmul",
     scan, without the extra data movement.
     """
     if cdf is None:
-        cdf = scan(w, axis=-1, method=method)
+        cdf = scan(w, axis=-1, method=method, tile_s=tile_s)
     total = cdf[..., -1:]
     theta = jax.random.uniform(key, w.shape[:-1] + (1,), dtype=cdf.dtype) * total
     idx = jnp.sum((cdf < theta).astype(jnp.int32), axis=-1)
     return jnp.clip(idx, 0, w.shape[-1] - 1)
 
 
+@_register("top_p_tail", "matmul", "vector")
+def _top_p_tail_unfused(sorted_p, key, *, p, method, tile_s, interpret):
+    """cumsum -> cutoff -> masked renormalised CDF -> inverse-transform sample."""
+    cum = scan(sorted_p, axis=-1, method=method, tile_s=tile_s)
+    cut = (cum - sorted_p) > p                    # llama3's sample_top_p formula
+    masked = jnp.where(cut, 0.0, sorted_p)
+    return weighted_sample(masked, key, method=method, tile_s=tile_s)
+
+
+@_register("top_p_tail", "kernel")
+def _top_p_tail_fused(sorted_p, key, *, p, method, tile_s, interpret):
+    from repro.kernels import ops as _kops
+    u = jax.random.uniform(key, sorted_p.shape[:-1] + (1,), dtype=jnp.float32)
+    return _kops.topp_mask_sample_kernel(sorted_p, u, p=p, interpret=interpret)
+
+
 def top_p_sample(logits: jax.Array, key: jax.Array, p: float = 0.9,
                  temperature: float = 1.0, *, method: str = "matmul",
-                 sort_method: str = "radix") -> jax.Array:
+                 sort_method: str = "radix", tile_s: int = 128,
+                 interpret: Optional[bool] = None) -> jax.Array:
     """Nucleus sampling exactly as in the paper's Llama3 case study (§5, §6.5).
 
     sort (radix, scan-based) -> prefix-sum of sorted probabilities -> mask tokens
     whose *preceding* cumulative mass exceeds ``p`` -> renormalise -> weighted sample.
-    With fp16-style 16-bit keys this is the paper's "17 scans per batch row" operator.
+    With fp16-style 16-bit keys this is the paper's "17 scans per batch row" operator;
+    ``method="kernel"`` runs the sort as fused radix passes and the whole sampling
+    tail as one Pallas launch.
     """
     if temperature != 1.0:
         logits = logits / temperature
@@ -214,12 +311,11 @@ def top_p_sample(logits: jax.Array, key: jax.Array, p: float = 0.9,
         # Sort on bf16-rounded keys (16 bits = 16 splits, as in the paper's fp16
         # evaluation); ties/rounding only reorder within ~3-ulp probability bands.
         keys16 = probs.astype(jnp.bfloat16)
-        _, order = radix_sort(keys16, descending=True, method=method)
+        _, order = radix_sort(keys16, descending=True, method=method,
+                              tile_s=tile_s, interpret=interpret)
     else:
         order = jnp.argsort(-probs, axis=-1)
     sorted_p = jnp.take_along_axis(probs, order, axis=-1)
-    cum = scan(sorted_p, axis=-1, method=method)
-    cut = (cum - sorted_p) > p                    # llama3's sample_top_p formula
-    masked = jnp.where(cut, 0.0, sorted_p)
-    j = weighted_sample(masked, key, method=method)
+    j = dispatch("top_p_tail", method)(
+        sorted_p, key, p=p, method=method, tile_s=tile_s, interpret=interpret)
     return jnp.take_along_axis(order, j[..., None], axis=-1)[..., 0]

@@ -22,7 +22,7 @@ Used by the Mamba2 blocks (zamba2) and the mLSTM blocks (xlstm).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -53,7 +53,6 @@ def ssd_scan(
 ):
     """Chunked SSD scan.  Returns y (B,S,H,P) [and final state (B,H,N,P)]."""
     bsz, s, h, p = x.shape
-    n = b_mat.shape[-1]
     q = min(chunk, s)
     pad = (-s) % q
     if pad:

@@ -7,9 +7,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.scan_mm import scan_tiles
+from repro.kernels.split_mm import radix_pass, split_tiles, topp_mask_sample_tiles
 from repro.kernels.ssd_chunk import ssd_chunk_scan
 
-__all__ = ["scan_kernel", "ssd_kernel"]
+__all__ = ["scan_kernel", "ssd_kernel", "split_kernel", "radix_sort_enc_kernel",
+           "topp_mask_sample_kernel"]
 
 
 @functools.partial(jax.jit, static_argnames=("s", "variant", "accum_dtype", "interpret"))
@@ -25,3 +27,42 @@ def ssd_kernel(x, a_log, b_mat, c_mat, *, chunk: int = 128,
                interpret: bool | None = None):
     """Fused chunked SSD scan (gated linear recurrence on the MXU)."""
     return ssd_chunk_scan(x, a_log, b_mat, c_mat, chunk=chunk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("s", "interpret"))
+def split_kernel(x: jax.Array, flags: jax.Array, *, s: int = 128,
+                 interpret: bool | None = None):
+    """Fused SplitInd (paper §5): ``(z, indices, n_true)`` in one launch/row."""
+    return split_tiles(x, flags, s=s, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "s", "interpret"))
+def radix_sort_enc_kernel(enc: jax.Array, *, bits: int, s: int = 128,
+                          interpret: bool | None = None):
+    """Stable LSB radix sort of an unsigned encoding via fused radix passes.
+
+    ``enc``: (..., n) unsigned keys (see ``primitives._encode_for_sort``).
+    Returns ``(sorted_enc, permutation)``.  One ``radix_pass`` launch per bit;
+    the tail is padded once with the maximum key so it stays at the end.
+    """
+    *lead, n = enc.shape
+    work = enc.reshape(-1, n)
+    b = work.shape[0]
+    pad = (-n) % s
+    if pad:
+        fill = jnp.full((b, pad), jnp.iinfo(enc.dtype).max, enc.dtype)
+        work = jnp.concatenate([work, fill], axis=-1)
+    perm = jnp.broadcast_to(jnp.arange(work.shape[-1], dtype=jnp.int32),
+                            work.shape)
+    for bit in range(bits):
+        work, perm = radix_pass(work, perm, shift=bit, s=s, interpret=interpret)
+    work = work[:, :n].reshape(*lead, n)
+    perm = perm[:, :n].reshape(*lead, n)
+    return work, perm
+
+
+@functools.partial(jax.jit, static_argnames=("p", "interpret"))
+def topp_mask_sample_kernel(sorted_p: jax.Array, u: jax.Array, *, p: float,
+                            interpret: bool | None = None) -> jax.Array:
+    """Fused nucleus-sampling tail: index into the sorted order, one launch."""
+    return topp_mask_sample_tiles(sorted_p, u, p=p, interpret=interpret)

@@ -17,3 +17,28 @@ def ssd_ref(x, a_log, b_mat, c_mat):
     """Oracle for ``ssd_chunk.ssd_chunk_scan``: sequential recurrence over time."""
     from repro.core.ssd import ssd_scan_ref
     return ssd_scan_ref(x, a_log, b_mat, c_mat)
+
+
+def split_ref(x: jax.Array, flags: jax.Array):
+    """Oracle for ``split_mm.split_tiles``: the unfused scan+scatter SplitInd."""
+    from repro.core.primitives import split
+    return split(x, flags, method="vector")
+
+
+def radix_sort_enc_ref(enc: jax.Array, *, bits: int):
+    """Oracle for ``ops.radix_sort_enc_kernel``: unfused per-bit splits."""
+    from repro.core.primitives import dispatch
+    return dispatch("radix_passes", "vector")(
+        enc, bits, method="vector", tile_s=128, interpret=None)
+
+
+def topp_mask_sample_ref(sorted_p: jax.Array, u: jax.Array, *, p: float):
+    """Oracle for ``split_mm.topp_mask_sample_tiles`` (index into sorted order)."""
+    sp = sorted_p.astype(jnp.float32)
+    cum = jnp.cumsum(sp, axis=-1)
+    cut = (cum - sp) > p
+    masked = jnp.where(cut, 0.0, sp)
+    cdf = jnp.cumsum(masked, axis=-1)
+    theta = u.astype(jnp.float32) * cdf[..., -1:]
+    j = jnp.sum((cdf < theta).astype(jnp.int32), axis=-1)
+    return jnp.clip(j, 0, sorted_p.shape[-1] - 1)

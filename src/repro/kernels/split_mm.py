@@ -1,0 +1,225 @@
+"""Fused Pallas TPU kernels for the paper's scan-based operators (§5).
+
+The paper's SplitInd is the building block of compress / radix sort / top-k /
+top-p: an int8 mask scan produces destination offsets, then values (and their
+indices) are permuted.  The pure-JAX path in ``repro.core.primitives`` runs the
+mask scan and the scatter as separate XLA ops, so the scanned mask round-trips
+through HBM between them.  Each kernel here performs the whole operator in one
+launch per batch row:
+
+* ``split_tiles``   — SplitInd: the int8 -> int32 mask scan runs on the MXU
+  (``A @ U_s`` with ``U_s`` materialised in-register from iota comparisons, so
+  no constant operand is streamed from HBM), destination offsets are computed
+  on the VPU, and values + original indices are scattered — mask, offsets and
+  destinations all stay in VMEM.
+* ``radix_pass``    — one LSB radix pass: digit extraction, the matmul split
+  and the permutation of (keys, permutation) chained in a single launch.
+* ``topp_mask_sample_tiles`` — the tail of nucleus sampling fused: prefix sum
+  of the sorted probabilities, the ``cum - p > threshold`` cutoff, the masked
+  CDF and the inverse-transform sample, emitting only one int32 per row.
+
+Ascend performs the post-scan permutation with vector-core gather/scatter
+instructions; the analogue here is a jnp scatter inside the kernel.  That is
+exact (integer destinations) and is what the interpret path — the CI target —
+executes; on hardware it requires Mosaic dynamic-scatter support.  The top-p
+kernel keeps its two prefix sums on the VPU (``jnp.cumsum``) so its output is
+bit-identical to the unfused ``method="vector"`` reference; the MXU tile-scan
+variant of the same prefix sum lives in ``scan_mm``.
+
+dtype rule (paper's mask-scan specialization): the mask is fed to the MXU as
+int8 and accumulated in int32, whatever the payload dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["split_tiles", "radix_pass", "topp_mask_sample_tiles"]
+
+
+# ---------------------------------------------------------------------------
+# Shared in-kernel SplitInd body
+# ---------------------------------------------------------------------------
+
+
+def _splitind_body(flags_row, payload_rows, *, s: int):
+    """SplitInd on one (1, n) row held in VMEM.
+
+    ``flags_row``: (1, n) values in {0, 1} (padding must be 0 — it then maps to
+    the identity at the tail).  Returns (scattered payloads, original-index
+    permutation, number of flagged elements).
+    """
+    n = flags_row.shape[-1]
+    rows = n // s
+    # --- int8 mask scan on the MXU (ScanU rows of width s) ---
+    a = flags_row.reshape(rows, s).astype(jnp.int8)
+    ri = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    ci = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    u = (ri <= ci).astype(jnp.int8)                    # U_s, built in-register
+    local = jax.lax.dot_general(a, u, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.int32)
+    sums = local[:, -1:]
+    prefix = jnp.cumsum(sums, axis=0) - sums           # VPU carry propagation
+    inc = (local + prefix).reshape(1, n)               # inclusive mask scan
+    # --- destination offsets (paper's SplitInd indexing) ---
+    fi = flags_row.astype(jnp.int32)
+    ex = inc - fi                                      # exclusive mask scan
+    n_true = inc[0, -1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
+    dest = jnp.where(fi == 1, ex, n_true + iota - ex)[0]
+    # --- permutation (Ascend: vector-core scatter; here: in-VMEM jnp scatter) ---
+    outs = tuple(jnp.zeros_like(p).at[0, dest].set(p[0]) for p in payload_rows)
+    ind = jnp.zeros((1, n), jnp.int32).at[0, dest].set(iota[0])
+    return outs, ind, n_true
+
+
+# ---------------------------------------------------------------------------
+# split
+# ---------------------------------------------------------------------------
+
+
+def _split_kernel(x_ref, f_ref, z_ref, ind_ref, cnt_ref, *, s: int):
+    (z,), ind, n_true = _splitind_body(f_ref[...], (x_ref[...],), s=s)
+    z_ref[...] = z
+    ind_ref[...] = ind
+    cnt_ref[0, 0] = n_true
+
+
+def split_tiles(x: jax.Array, flags: jax.Array, *, s: int = 128,
+                interpret: bool | None = None):
+    """Fused SplitInd over the last axis: ``(z, indices, n_true)``.
+
+    ``x``: (..., n) payload; ``flags``: same shape, boolean/int.  One kernel
+    launch per batch row; the row (padded to a multiple of ``s``) lives in VMEM.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    *lead, n = x.shape
+    xb = x.reshape(-1, n)
+    fb = flags.reshape(-1, n).astype(jnp.int8)
+    b = xb.shape[0]
+    pad = (-n) % s
+    if pad:
+        xb = jnp.pad(xb, ((0, 0), (0, pad)))
+        fb = jnp.pad(fb, ((0, 0), (0, pad)))           # pad flags 0 -> identity tail
+    np_ = xb.shape[-1]
+    z, ind, cnt = pl.pallas_call(
+        functools.partial(_split_kernel, s=s),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, np_), lambda i: (i, 0)),
+            pl.BlockSpec((1, np_), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, np_), lambda i: (i, 0)),
+            pl.BlockSpec((1, np_), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, np_), x.dtype),
+            jax.ShapeDtypeStruct((b, np_), jnp.int32),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        ],
+        interpret=interpret,
+        name=f"split_mm_s{s}",
+    )(xb, fb)
+    z = z[:, :n].reshape(*lead, n)
+    ind = ind[:, :n].reshape(*lead, n)
+    cnt = cnt[:, 0].reshape(lead) if lead else cnt[0, 0]
+    return z, ind, cnt
+
+
+# ---------------------------------------------------------------------------
+# radix pass
+# ---------------------------------------------------------------------------
+
+
+def _radix_pass_kernel(w_ref, p_ref, wo_ref, po_ref, *, shift: int, s: int):
+    w = w_ref[...]
+    one = jnp.asarray(1, w.dtype)
+    flags = (((w >> shift) & one) == 0).astype(jnp.int8)   # zeros-first LSB pass
+    (wo, po), _, _ = _splitind_body(flags, (w, p_ref[...]), s=s)
+    wo_ref[...] = wo
+    po_ref[...] = po
+
+
+def radix_pass(work: jax.Array, perm: jax.Array, *, shift: int, s: int = 128,
+               interpret: bool | None = None):
+    """One fused LSB radix pass on pre-padded (b, n) operands.
+
+    ``work`` must be an unsigned encoding padded at the tail with the maximum
+    key value, so padding sorts (stably) to the end and stays there across
+    passes.  Digit extraction, the int8 matmul mask scan and the permutation of
+    both arrays happen in one launch.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    b, n = work.shape
+    return pl.pallas_call(
+        functools.partial(_radix_pass_kernel, shift=shift, s=s),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n), work.dtype),
+            jax.ShapeDtypeStruct((b, n), jnp.int32),
+        ],
+        interpret=interpret,
+        name=f"radix_pass_b{shift}_s{s}",
+    )(work, perm)
+
+
+# ---------------------------------------------------------------------------
+# fused top-p tail (cumsum -> cutoff -> masked CDF -> inverse-transform sample)
+# ---------------------------------------------------------------------------
+
+
+def _topp_kernel(sp_ref, u_ref, j_ref, *, p: float, n_real: int):
+    sp = sp_ref[...]                                   # (1, n) sorted probs, desc
+    cum = jnp.cumsum(sp, axis=-1)
+    cut = (cum - sp) > p                               # llama3 sample_top_p formula
+    masked = jnp.where(cut, jnp.zeros_like(sp), sp)
+    cdf = jnp.cumsum(masked, axis=-1)
+    theta = u_ref[0, 0] * cdf[0, -1]
+    j = jnp.sum((cdf < theta).astype(jnp.int32))
+    j_ref[0, 0] = jnp.clip(j, 0, n_real - 1)
+
+
+def topp_mask_sample_tiles(sorted_p: jax.Array, u: jax.Array, *, p: float,
+                           interpret: bool | None = None) -> jax.Array:
+    """Fused nucleus-sampling tail.
+
+    ``sorted_p``: (..., n) probabilities sorted descending; ``u``: (..., 1)
+    uniform draws.  Returns the (...,) int32 index *into the sorted order* —
+    four elementwise/scan passes and a reduction in one launch, with only one
+    scalar per row leaving VMEM.  Both prefix sums use the VPU cumsum so the
+    result is bit-identical to the unfused ``method="vector"`` sampler.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    *lead, n = sorted_p.shape
+    sp = sorted_p.reshape(-1, n).astype(jnp.float32)
+    ub = u.reshape(-1, 1).astype(jnp.float32)
+    b = sp.shape[0]
+    j = pl.pallas_call(
+        functools.partial(_topp_kernel, p=p, n_real=n),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        interpret=interpret,
+        name="topp_mask_sample",
+    )(sp, ub)
+    return j[:, 0].reshape(lead) if lead else j[0, 0]

@@ -164,8 +164,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *, debug=False,
              scan_method="matmul", overrides=None, mesh_shape=None, tag=""):
     if mesh_shape is not None:
         d, m = mesh_shape
-        mesh = jax.make_mesh((d, m), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.utils.compat import make_mesh
+        mesh = make_mesh((d, m), ("data", "model"))
     else:
         mesh_fn = make_debug_mesh if debug else make_production_mesh
         mesh = mesh_fn(multi_pod=mesh_kind == "multi")

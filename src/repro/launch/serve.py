@@ -11,7 +11,6 @@ import time
 import jax
 import numpy as np
 
-from repro.data.pipeline import SyntheticLM
 from repro.models.model import ARCHS, build_model, get_config, synth_batch
 from repro.configs.base import ShapeConfig
 from repro.serving.engine import ServeEngine

@@ -4,10 +4,9 @@ from __future__ import annotations
 import re
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.utils.sharding import dp_axes, param_shardings
+from repro.utils.sharding import dp_axes
 
 
 def batch_specs(mesh: Mesh, batch_tree):

@@ -13,7 +13,6 @@ from __future__ import annotations
 import argparse
 import dataclasses
 
-import jax
 
 from repro.data.pipeline import SyntheticLM
 from repro.launch.mesh import make_debug_mesh, make_production_mesh

@@ -6,12 +6,11 @@ pytree plus the write position and update it functionally.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import (apply_rope, linear, linear_init, ninit,
+from repro.models.layers import (apply_rope, linear, ninit,
                                  rmsnorm, rmsnorm_init, softcap)
 from repro.utils.sharding import constrain
 

@@ -7,7 +7,7 @@ from typing import Dict
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, ShapeConfig, SHAPES
+from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models.transformer import TransformerLM
 
 ARCHS = {

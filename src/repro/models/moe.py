@@ -14,6 +14,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.utils.compat import shard_map
+
 from repro.core.scan import scan as mm_scan
 from repro.models.layers import ACTS, linear, ninit
 from repro.utils.sharding import constrain
@@ -116,7 +118,7 @@ def moe_apply_ep(p, xt, cfg, probs, gate_vals, expert_idx, *, mesh, dpa,
     from jax.sharding import PartitionSpec as P
     dspec = P(dpa if dpa else None, None)
     wspec = P(None, "model", None, None)          # leading fake dim for the slice
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh,
         in_specs=(dspec, dspec, dspec, wspec, wspec, wspec),
         out_specs=dspec)
@@ -230,7 +232,6 @@ def moe_apply(p, x, cfg, *, scan_method=None, no_drop=False):
 
 def _load_balance_loss(probs, expert_idx, n_experts):
     """Switch-style auxiliary load-balancing loss."""
-    t = probs.shape[0]
     onehot = jax.nn.one_hot(expert_idx[:, 0], n_experts, dtype=F32)
     frac_tokens = onehot.mean(axis=0)
     frac_probs = probs.mean(axis=0)

@@ -14,8 +14,6 @@ Interface (per built model):
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,8 +22,8 @@ from repro.models import attention as att
 from repro.models import mamba as mmb
 from repro.models import moe as moe_lib
 from repro.models import xlstm as xl
-from repro.models.layers import (embed_init, embed_lookup, linear, mlp,
-                                 mlp_init, ninit, rmsnorm, rmsnorm_init,
+from repro.models.layers import (embed_init, embed_lookup, mlp,
+                                 mlp_init, rmsnorm, rmsnorm_init,
                                  sinusoidal_pos, softcap, unembed,
                                  use_compute_dtype)
 from repro.utils.sharding import constrain
@@ -360,7 +358,6 @@ class TransformerLM:
                    pos=None):
         cfg = self.cfg
         tokens = batch["tokens"]
-        b = tokens.shape[0]
         h = self._embed(params, tokens)
         h = constrain(h, "dp", None, None)
         prefix_len = None

@@ -23,7 +23,6 @@ def mlstm_block_init(key, cfg, dtype=jnp.float32):
     x = cfg.xlstm
     d = cfg.d_model
     d_inner = int(x.proj_factor * d)
-    hd = d_inner // x.n_heads
     ks = jax.random.split(key, 9)
     return {
         "in_proj": ninit(ks[0], (d, 2 * d_inner), dtype=dtype),   # (x_in, z)

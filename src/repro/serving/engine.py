@@ -3,8 +3,7 @@ scan-based top-p (nucleus) sampler wired into the decode step (paper ยง5/ยง6.5 โ
 radix sort + prefix sum + inverse-transform sample, all on the matmul scan)."""
 from __future__ import annotations
 
-import functools
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -15,9 +14,14 @@ from repro.utils.sharding import use_mesh
 
 
 class ServeEngine:
+    SAMPLERS = ("greedy", "topp_scan", "topp_kernel", "topp_xla")
+
     def __init__(self, cfg, params, *, mesh=None, max_len: int = 512,
                  top_p: float = 0.9, temperature: float = 1.0,
                  sampler: str = "topp_scan"):
+        if sampler not in self.SAMPLERS:
+            raise ValueError(
+                f"unknown sampler {sampler!r}; expected one of {self.SAMPLERS}")
         self.cfg = cfg
         self.params = params
         self.mesh = mesh
@@ -31,10 +35,12 @@ class ServeEngine:
 
     # ---- sampling (the paper's operator) ----
     def _sample(self, logits, key):
+        """samplers: greedy | topp_scan (matmul scans) | topp_kernel (fused
+        Pallas radix passes + one-launch sampling tail) | topp_xla (baseline)."""
         if self.sampler == "greedy":
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        method = "matmul"
-        sort_method = "radix" if self.sampler == "topp_scan" else "xla"
+        method = "kernel" if self.sampler == "topp_kernel" else "matmul"
+        sort_method = "xla" if self.sampler == "topp_xla" else "radix"
         return top_p_sample(logits, key, p=self.top_p,
                             temperature=self.temperature, method=method,
                             sort_method=sort_method).astype(jnp.int32)

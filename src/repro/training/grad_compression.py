@@ -16,6 +16,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.utils.compat import axis_size
+
 F32 = jnp.float32
 
 
@@ -43,7 +45,7 @@ def compressed_psum(grad: jax.Array, axis_name: str, error: jax.Array):
     q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
     new_error = g - q.astype(F32) * scale
     tot = jax.lax.psum(q.astype(jnp.int32), axis_name)   # int8 wire, int32 accum
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     mean = tot.astype(F32) * scale / n
     return mean, new_error
 

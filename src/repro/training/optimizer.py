@@ -8,7 +8,7 @@ via ``opt_state_specs``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -3,13 +3,11 @@ resume, and straggler monitoring.  Works on 1 CPU device or a production mesh
 unchanged (shardings degrade to replication)."""
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.model import build_model

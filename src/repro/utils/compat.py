@@ -1,0 +1,37 @@
+"""Compatibility shims across the jax release range we support.
+
+The repo targets current jax, but CI (and minimal environments) may run the
+0.4.x series, where ``jax.sharding.AxisType`` / ``Mesh(axis_types=...)`` and
+the top-level ``jax.shard_map`` don't exist yet.  Everything that needs one of
+those goes through here.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.5: explicit/auto axis types on meshes
+    from jax.sharding import AxisType  # noqa: F401
+    _HAVE_AXIS_TYPES = True
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
+    _HAVE_AXIS_TYPES = False
+
+try:  # jax >= 0.5: shard_map graduated to the top level
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def axis_size(axis_name):
+    """Static size of a named mesh axis, inside ``shard_map``."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    import jax.core as _core  # 0.4.x: axis_frame(name) returns the int size
+    return _core.axis_frame(axis_name)
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where the installed jax has them."""
+    if _HAVE_AXIS_TYPES:
+        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)

@@ -5,7 +5,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
 
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -23,10 +22,9 @@ def run_sub(code: str, timeout=520):
 def test_mcscan_multi_device():
     run_sub("""
         import numpy as np, jax, jax.numpy as jnp
-        from jax.sharding import AxisType
         from repro.core import mcscan
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+        from repro.utils.compat import make_mesh
+        mesh = make_mesh((4, 2), ("data", "model"))
         rng = np.random.default_rng(1)
         x = rng.standard_normal((2, 4096)).astype(np.float32)
         out = mcscan(jnp.asarray(x), mesh, "data", batch_axis_name="model")
@@ -78,11 +76,11 @@ def test_data_parallel_training_step():
 def test_checkpoint_reshard_elastic():
     run_sub("""
         import tempfile, numpy as np, jax, jax.numpy as jnp
-        from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+        from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.training.checkpoint import CheckpointManager
-        mesh8 = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
-        mesh2 = jax.make_mesh((2, 2), ("data", "model"),
-                              axis_types=(AxisType.Auto,) * 2)
+        from repro.utils.compat import make_mesh
+        mesh8 = make_mesh((8,), ("data",))
+        mesh2 = make_mesh((2, 2), ("data", "model"))
         x = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
         tree = {"w": jax.device_put(x, NamedSharding(mesh8, P("data", None)))}
         with tempfile.TemporaryDirectory() as d:
@@ -100,16 +98,17 @@ def test_checkpoint_reshard_elastic():
 def test_compressed_gradient_allreduce():
     run_sub("""
         import numpy as np, jax, jax.numpy as jnp
-        from jax.sharding import AxisType, PartitionSpec as P
+        from jax.sharding import PartitionSpec as P
         from repro.training.grad_compression import (compressed_psum,
                                                      quantize_int8,
                                                      dequantize_int8)
-        mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+        from repro.utils.compat import make_mesh, shard_map
+        mesh = make_mesh((8,), ("data",))
         rng = np.random.default_rng(0)
         g = rng.standard_normal((8, 64)).astype(np.float32)
         def body(gl, el):
             return compressed_psum(gl, "data", el)
-        out, err = jax.shard_map(body, mesh=mesh,
+        out, err = shard_map(body, mesh=mesh,
                                  in_specs=(P("data", None), P("data", None)),
                                  out_specs=(P(), P("data", None)))(
             jnp.asarray(g), jnp.zeros_like(jnp.asarray(g)))

@@ -4,7 +4,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # property tests skip (not error) in minimal environments
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
 
 from repro.core import (compress, radix_sort, split, top_p_sample, topk,
                         weighted_sample)
@@ -108,23 +113,30 @@ def test_top_p_batched_scan_vs_xla_sort():
     assert np.mean(np.asarray(a) == np.asarray(b)) > 0.7
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.lists(st.integers(0, 1), min_size=1, max_size=300))
-def test_property_split_partition(flags):
-    f = np.asarray(flags, bool)
-    x = np.arange(len(f), dtype=np.float32)
-    z, ind, nt = split(jnp.asarray(x), jnp.asarray(f))
-    nt = int(nt)
-    assert nt == f.sum()
-    # output is a permutation that is stable within each class
-    np.testing.assert_allclose(np.sort(np.asarray(z)), x)
-    np.testing.assert_array_equal(np.asarray(z)[:nt], x[f])
+if HAVE_HYPOTHESIS:
 
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(st.integers(0, 1), min_size=1, max_size=300))
+    def test_property_split_partition(flags):
+        f = np.asarray(flags, bool)
+        x = np.arange(len(f), dtype=np.float32)
+        z, ind, nt = split(jnp.asarray(x), jnp.asarray(f))
+        nt = int(nt)
+        assert nt == f.sum()
+        # output is a permutation that is stable within each class
+        np.testing.assert_allclose(np.sort(np.asarray(z)), x)
+        np.testing.assert_array_equal(np.asarray(z)[:nt], x[f])
 
-@settings(max_examples=15, deadline=None)
-@given(st.lists(st.floats(-100, 100, allow_nan=False, width=16),
-                min_size=1, max_size=200))
-def test_property_radix_sort(xs):
-    x = np.asarray(xs, np.float16)
-    v, _ = radix_sort(jnp.asarray(x))
-    np.testing.assert_array_equal(np.asarray(v), np.sort(x, kind="stable"))
+    @settings(max_examples=15, deadline=None)
+    @given(st.lists(st.floats(-100, 100, allow_nan=False, width=16),
+                    min_size=1, max_size=200))
+    def test_property_radix_sort(xs):
+        x = np.asarray(xs, np.float16)
+        v, _ = radix_sort(jnp.asarray(x))
+        np.testing.assert_array_equal(np.asarray(v), np.sort(x, kind="stable"))
+
+else:
+
+    @pytest.mark.skip(reason="hypothesis not installed — property tests skipped")
+    def test_property_suite():
+        pass  # visible placeholder so missing hypothesis shows as a skip

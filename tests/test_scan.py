@@ -1,12 +1,16 @@
 """Core matmul-scan correctness: paper Alg. 1 (ScanU), Alg. 2/Eq. 1 (ScanUL1),
 multi-level blocking, dtype specializations, exclusive/reverse/axis handling."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core import scan, tile_scan_scanu, tile_scan_scanul1, upper_ones
+try:  # property tests skip (not error) in minimal environments
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+from repro.core import scan, tile_scan_scanu, tile_scan_scanul1
 
 
 @pytest.mark.parametrize("variant", ["scanu", "scanul1"])
@@ -75,34 +79,40 @@ def test_vector_baseline_agrees():
 # ---- property-based: scan is the discrete integral (hypothesis) ----
 
 
-@settings(max_examples=30, deadline=None)
-@given(st.lists(st.floats(-100, 100, allow_nan=False, width=32),
-                min_size=1, max_size=600),
-       st.sampled_from([8, 16, 128]),
-       st.sampled_from(["scanu", "scanul1"]))
-def test_property_matches_numpy(xs, s, variant):
-    x = np.asarray(xs, np.float32)
-    out = np.asarray(scan(jnp.asarray(x), method="matmul", variant=variant,
-                          tile_s=s))
-    np.testing.assert_allclose(out, np.cumsum(x.astype(np.float64)),
-                               rtol=1e-3, atol=1e-2)
+if HAVE_HYPOTHESIS:
 
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                    min_size=1, max_size=600),
+           st.sampled_from([8, 16, 128]),
+           st.sampled_from(["scanu", "scanul1"]))
+    def test_property_matches_numpy(xs, s, variant):
+        x = np.asarray(xs, np.float32)
+        out = np.asarray(scan(jnp.asarray(x), method="matmul", variant=variant,
+                              tile_s=s))
+        np.testing.assert_allclose(out, np.cumsum(x.astype(np.float64)),
+                                   rtol=1e-3, atol=1e-2)
 
-@settings(max_examples=25, deadline=None)
-@given(st.lists(st.integers(-5, 5), min_size=1, max_size=500))
-def test_property_int_exact(xs):
-    x = np.asarray(xs, np.int32)
-    out = np.asarray(scan(jnp.asarray(x), method="matmul", tile_s=16))
-    np.testing.assert_array_equal(out, np.cumsum(x))
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.integers(-5, 5), min_size=1, max_size=500))
+    def test_property_int_exact(xs):
+        x = np.asarray(xs, np.int32)
+        out = np.asarray(scan(jnp.asarray(x), method="matmul", tile_s=16))
+        np.testing.assert_array_equal(out, np.cumsum(x))
 
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(st.floats(-10, 10, allow_nan=False, width=32),
+                    min_size=2, max_size=300))
+    def test_property_exclusive_shift(xs):
+        """exclusive scan == inclusive scan shifted right with 0 prepended."""
+        x = jnp.asarray(np.asarray(xs, np.float32))
+        inc = np.asarray(scan(x, tile_s=16))
+        exc = np.asarray(scan(x, exclusive=True, tile_s=16))
+        np.testing.assert_allclose(exc[1:], inc[:-1], rtol=1e-5, atol=1e-5)
+        assert exc[0] == 0.0
 
-@settings(max_examples=20, deadline=None)
-@given(st.lists(st.floats(-10, 10, allow_nan=False, width=32),
-                min_size=2, max_size=300))
-def test_property_exclusive_shift(xs):
-    """exclusive scan == inclusive scan shifted right with 0 prepended."""
-    x = jnp.asarray(np.asarray(xs, np.float32))
-    inc = np.asarray(scan(x, tile_s=16))
-    exc = np.asarray(scan(x, exclusive=True, tile_s=16))
-    np.testing.assert_allclose(exc[1:], inc[:-1], rtol=1e-5, atol=1e-5)
-    assert exc[0] == 0.0
+else:
+
+    @pytest.mark.skip(reason="hypothesis not installed — property tests skipped")
+    def test_property_suite():
+        pass  # visible placeholder so missing hypothesis shows as a skip

@@ -1,6 +1,5 @@
 """Chunked SSD scan + mLSTM vs sequential references; MCScan distributed scan."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 
