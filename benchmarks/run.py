@@ -13,6 +13,10 @@ the TPU-side projection lives in EXPERIMENTS.md §Roofline).
   Fig 11 radix sort vs jnp.sort (fp16)
   Fig 12 batched scan bandwidth vs batch size (len 65K)
   Fig 13 top-p sampling: baseline sort+cumsum vs radix+MCScan build
+
+  scan_pipeline  blocked §4 pipeline: achieved bytes/s vs memcpy baseline
+                 (the paper's headline 74.9%-of-memcpy metric) across methods
+                 and dtypes -> BENCH_scan_pipeline.json
 """
 from __future__ import annotations
 
@@ -31,7 +35,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks.common import dump_json, row, timeit  # noqa: E402
-from repro.core import scan  # noqa: E402
+from repro.core import accum_dtype_for, scan  # noqa: E402
 from repro.core.primitives import (compress, radix_sort, split,  # noqa: E402
                                    top_p_sample)
 
@@ -203,6 +207,47 @@ def fig13_top_p(quick=True):
 
 
 # ---------------------------------------------------------------------------
+# Blocked pipeline sweep: large-N bandwidth vs memcpy (paper §4 headline)
+# ---------------------------------------------------------------------------
+
+
+def scan_pipeline_sweep(lens, smoke=False):
+    """Paper §4 blocked pipeline: achieved bytes/s as a fraction of memcpy.
+
+    The paper's headline multi-core metric is scan bandwidth relative to a
+    memory copy (74.9% on 8 Ascend cores).  For each length and dtype we time
+    a jitted copy as the roofline, then every scan method; ``memcpy_frac`` in
+    the derived column (and in BENCH_scan_pipeline.json) is
+    ``(scan bytes moved / t) / (copy bytes moved / t_copy)``.  Scan moves
+    ``n * (in_itemsize + accum_itemsize)`` bytes — the accumulation dtype
+    (int8 -> int32, bf16 -> f32) widens the write side.
+    """
+    dts = {"float32": jnp.float32} if smoke else \
+        {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "int8": jnp.int8}
+    methods = ("vector", "matmul", "kernel", "blocked")
+    s = 32 if smoke else 128
+    for dt_name, dt in dts.items():
+        for n in lens:
+            rng = np.random.default_rng(0)
+            if dt_name == "int8":
+                x = jnp.asarray(rng.integers(-3, 4, n), dt)
+            else:
+                x = jnp.asarray(rng.standard_normal(n), dt)
+            cp = jax.jit(lambda a: a + jnp.zeros((), a.dtype))
+            t_copy = timeit(cp, x, repeats=3, warmup=1)
+            copy_bw = 2 * x.nbytes / t_copy
+            row(f"scan_pipeline/memcpy/{dt_name}/n={n}", t_copy,
+                f"GB/s={copy_bw / 1e9:.2f};memcpy_frac=1.000")
+            nbytes = x.nbytes + n * jnp.dtype(accum_dtype_for(dt)).itemsize
+            for m in methods:
+                fn = jax.jit(functools.partial(scan, method=m, tile_s=s))
+                t = timeit(fn, x, repeats=3, warmup=1)
+                bw = nbytes / t
+                row(f"scan_pipeline/{m}/{dt_name}/n={n}", t,
+                    f"GB/s={bw / 1e9:.2f};memcpy_frac={bw / copy_bw:.3f}")
+
+
+# ---------------------------------------------------------------------------
 # Operator benchmarks: split / sort / top-p across methods and dtypes
 # (tracks the fused-kernel trajectory, not just raw scan — ISSUE 1 tentpole)
 # ---------------------------------------------------------------------------
@@ -287,11 +332,13 @@ def main() -> None:
         "fig11": lambda: fig11_radix_sort(lens[:2]),
         "fig12": fig12_batched_bandwidth,
         "fig13": lambda: fig13_top_p(quick=not args.full),
+        "scan_pipeline": lambda: scan_pipeline_sweep(lens, smoke=args.smoke),
         "ops": lambda: ops_operators(smoke=args.smoke),
     }
     only = set(args.only.split(",")) if args.only else None
     if args.smoke and only is None:
-        only = {"fig3", "fig10", "fig11", "ops"}      # fast, single-process
+        # fast, single-process sections
+        only = {"fig3", "fig10", "fig11", "scan_pipeline", "ops"}
     print("name,us_per_call,derived")
     for name, fn in sections.items():
         if only and name not in only:

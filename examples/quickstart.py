@@ -24,6 +24,11 @@ print("mask scan dtype:", positions.dtype, "n_true:", int(positions[-1] + mask[-
 y_k = scan_kernel(x[:16384], s=128)
 print("pallas kernel matches:", bool(jnp.allclose(y_k, y_vec[:16384], atol=1e-2)))
 
+# 3b) the paper's §4 blocked multi-core pipeline (three Pallas grid phases:
+#     parallel block partial scans + block-sum carry scan + fused carry add)
+y_b = scan(x, method="blocked", tile_s=128, block_tiles=4)
+print("blocked pipeline matches:", bool(jnp.allclose(y_b, y_vec, atol=1e-2)))
+
 # 4) scan-based operators (paper §5)
 vals = jnp.asarray(np.random.default_rng(2).standard_normal(4096), jnp.float16)
 sorted_vals, order = radix_sort(vals, descending=True)

@@ -8,12 +8,20 @@ Paper structure (SSA with *recomputation*):
   SyncAll
   Phase 2: each block scans r locally and broadcast-adds its exclusive prefix.
 
-TPU mapping (DESIGN.md §2): a "block" is one device's shard under ``shard_map``.
-The block reduction is issued as an *independent* ``jnp.sum`` (not the last element of
-the local scan), so the ``all_gather`` of the B block sums has no data dependency on
-the matmul scan — XLA's latency-hiding scheduler overlaps the collective with the scan
-compute, which is precisely the paper's cube/vector phase-1 overlap.  Global traffic is
-2N + B elements, matching the paper's analysis.
+TPU mapping (DESIGN.md §2): the algorithm is applied twice, at two levels.
+
+* **Across devices** (this module): a "block" is one device's shard under
+  ``shard_map``.  The block reduction is issued as an *independent* ``jnp.sum``
+  (not the last element of the local scan), so the ``all_gather`` of the B
+  block sums has no data dependency on the local scan — XLA's latency-hiding
+  scheduler overlaps the collective with the scan compute, which is precisely
+  the paper's cube/vector phase-1 overlap.  Global traffic is 2N + B elements,
+  matching the paper's analysis.
+* **Within a device** (default ``method="blocked"``): the local shard runs the
+  same three-phase pipeline as fused Pallas grid kernels
+  (``repro.kernels.scan_pipeline``) — per-block matmul partial scans, a
+  block-sum carry scan, and a carry broadcast-add fused into the scan launch,
+  so each element is read and written once.
 """
 from __future__ import annotations
 
@@ -22,7 +30,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.utils.compat import axis_size, shard_map
+from repro.utils.compat import axis_size, shard_map, shard_map_unchecked
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.scan import scan as _scan, accum_dtype_for
@@ -34,15 +42,38 @@ def mcscan_local(
     x: jax.Array,
     axis_name: str,
     *,
-    method: str = "matmul",
+    method: str = "blocked",
     variant: str = "scanul1",
     tile_s: int = 128,
+    block_tiles: int = 8,
     exclusive: bool = False,
     accum_dtype=None,
 ) -> jax.Array:
     """Per-device body of MCScan; call inside ``shard_map``.
 
-    ``x`` is the local shard, contiguous along the scanned (last) axis.
+    Implements one grid step of paper Alg. 3: the independent block-reduction
+    recompute + ``all_gather`` (phase 1, vector units, overlapped by the
+    scheduler), the exclusive block-prefix matvec (phase 2), and the local scan
+    of the shard (phase 1, cube units) with the carry added (phase 3).
+
+    Args:
+        x: The local shard, ``(..., n_local)``, contiguous along the scanned
+            (last) axis.  Any dtype :func:`repro.core.scan.accum_dtype_for`
+            knows (int8 masks accumulate in int32, bf16/f16 in fp32).
+        axis_name: Mesh axis the scanned dimension is sharded over.
+        method: Local scan strategy (see :func:`repro.core.scan.scan`); the
+            default ``"blocked"`` is the fused three-phase Pallas pipeline.
+        variant: Tile algebra, ``"scanu"`` or ``"scanul1"``.
+        tile_s: Tile side ``s`` for the matmul scans.
+        block_tiles: Tiles per block for ``method="blocked"``.
+        exclusive: If true, the local scan is exclusive (the block offset is
+            unchanged — it is the sum of *whole* preceding shards).
+        accum_dtype: Accumulation dtype override; defaults to
+            ``accum_dtype_for(x.dtype)``.
+
+    Returns:
+        The globally-scanned local shard, same shape as ``x``, in the
+        accumulation dtype.
     """
     acc = jnp.dtype(accum_dtype) if accum_dtype is not None else accum_dtype_for(x.dtype)
     # Phase 1 "vector units": recomputed block reduction, independent of the scan.
@@ -52,15 +83,13 @@ def mcscan_local(
     idx = jax.lax.axis_index(axis_name)
     before = (jnp.arange(num_blocks) < idx).astype(acc)
     offset = jnp.tensordot(before, r.astype(acc), axes=(0, 0))   # exclusive block prefix
-    # Phase 1 "cube units": tile-local matmul scans (overlaps with the all_gather).
+    # Phase 1 "cube units": the fused per-device scan pipeline (overlaps with
+    # the all_gather) — phase 3's carry add for the *local* blocks is already
+    # fused inside it; the cross-device offset is added here.
     y_local = _scan(
         x, axis=-1, method=method, variant=variant, tile_s=tile_s,
-        exclusive=exclusive, accum_dtype=acc,
+        block_tiles=block_tiles, exclusive=exclusive, accum_dtype=acc,
     )
-    if exclusive:
-        # exclusive local scan already dropped x[..., -1]; the block offset is the
-        # same as in the inclusive case.
-        pass
     return y_local + offset[..., None]
 
 
@@ -69,17 +98,47 @@ def mcscan(
     mesh: Mesh,
     axis_name: str = "data",
     *,
-    method: str = "matmul",
+    method: str = "blocked",
     variant: str = "scanul1",
     tile_s: int = 128,
+    block_tiles: int = 8,
     exclusive: bool = False,
     accum_dtype=None,
     batch_axis_name: Optional[str] = None,
 ) -> jax.Array:
     """Scan the last axis of ``x``, sharded over ``axis_name`` of ``mesh``.
 
-    ``batch_axis_name`` optionally shards leading (batch) dims over a second mesh axis
-    — the batched-scan scheduling of paper §4.2.
+    The paper's multi-core scan with a device as the "core": each device runs
+    the fused blocked pipeline on its shard while the B block sums travel in a
+    single small ``all_gather``, giving 2N + B global traffic.
+
+    Args:
+        x: Global array ``(..., n)``; the last axis must divide evenly over
+            ``axis_name`` (standard ``shard_map`` sharding rules).
+        mesh: Device mesh to shard over.
+        axis_name: Mesh axis for the scanned (last) dimension.
+        method: Per-device scan strategy (default ``"blocked"``, the fused
+            pipeline; see :func:`repro.core.scan.scan` for the full contract).
+        variant: Tile algebra, ``"scanu"`` or ``"scanul1"``.
+        tile_s: Tile side ``s`` for the matmul scans.
+        block_tiles: Tiles per block for ``method="blocked"``.
+        exclusive: If true, compute the exclusive global scan.
+        accum_dtype: Accumulation dtype override; defaults to
+            ``accum_dtype_for(x.dtype)``.
+        batch_axis_name: Optionally shard leading (batch) dims over a second
+            mesh axis — the batched-scan scheduling of paper §4.2.
+
+    Returns:
+        The globally-scanned array, same shape as ``x``, in the accumulation
+        dtype.
+
+    Example:
+        >>> import jax.numpy as jnp
+        >>> from repro.utils.compat import make_mesh
+        >>> mesh = make_mesh((1,), ("data",))
+        >>> out = mcscan(jnp.ones((1, 8), jnp.int8), mesh, "data", tile_s=2)
+        >>> out.dtype.name, [int(v) for v in out[0]]
+        ('int32', [1, 2, 3, 4, 5, 6, 7, 8])
     """
     nd = x.ndim
     spec = [None] * nd
@@ -89,10 +148,14 @@ def mcscan(
     pspec = P(*spec)
 
     def body(xl):
+        """Run :func:`mcscan_local` on this device's shard."""
         return mcscan_local(
             xl, axis_name, method=method, variant=variant, tile_s=tile_s,
-            exclusive=exclusive, accum_dtype=accum_dtype,
+            block_tiles=block_tiles, exclusive=exclusive, accum_dtype=accum_dtype,
         )
 
-    fn = shard_map(body, mesh=mesh, in_specs=pspec, out_specs=pspec)
+    # pallas_call has no replication rule, so the Pallas-launching methods need
+    # the check disabled; the pure-XLA paths keep the safer checked shard_map.
+    sm = shard_map_unchecked if method in ("kernel", "blocked") else shard_map
+    fn = sm(body, mesh=mesh, in_specs=pspec, out_specs=pspec)
     return fn(x)

@@ -1,17 +1,20 @@
-"""Scan-based operators (paper §5): split, compress, radix sort, top-k, top-p,
-weighted sampling.
+"""Scan-based operators (paper §5): split, sort, top-k/top-p over one dispatch table.
 
-Every operator takes ``method=`` and routes through one dispatch table:
+Every operator takes ``method=`` and routes through a single table:
 
 * ``"matmul"`` — the paper's cube-unit scan (ScanU/ScanUL1) feeding unfused
   JAX gather/scatter (default).
 * ``"vector"`` — the plain ``jnp.cumsum`` vector baseline, same surrounding ops.
 * ``"kernel"`` — the fused Pallas kernels (``repro.kernels.split_mm``): mask
   scan, offsets and permutation in a single launch per batch row.
+* ``"blocked"`` — the unfused operators running their scans on the three-phase
+  blocked pipeline of paper §4 (``repro.kernels.scan_pipeline``), for large-N
+  inputs where read/write-once traffic dominates.
 
-The ``"kernel"`` path is bit-identical to ``"vector"`` for split / compress /
-radix_sort / sort / topk / top_p_sample (integer offsets are exact; the fused
-top-p tail keeps its prefix sums on the VPU cumsum).
+The ``"kernel"`` and ``"blocked"`` paths are bit-identical to ``"vector"`` for
+split / compress / radix_sort / sort / topk / top_p_sample (mask-scan offsets
+are int8 -> int32 and therefore exact; the fused top-p tail keeps its prefix
+sums on the VPU cumsum).
 
 Shapes are static (JAX): operators that logically return a variable number of
 elements (compress/split) return a full-size array plus a count, with the tail
@@ -24,7 +27,7 @@ from typing import Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.scan import scan
+from repro.core.scan import METHODS, scan
 
 __all__ = [
     "split", "compress", "radix_sort", "sort", "topk", "top_p_sample",
@@ -32,17 +35,19 @@ __all__ = [
     "dispatch", "METHODS",
 ]
 
-METHODS = ("matmul", "vector", "kernel")
+# METHODS is re-exported from repro.core.scan — one source for the contract.
 
-# Single dispatch table for the §5 operators: {op: {method: impl}}.  "matmul"
-# and "vector" share the unfused JAX implementations (the scan method differs
-# underneath); "kernel" entries are the fused Pallas launches, imported lazily
-# so importing repro.core never drags in pallas.
+# Single dispatch table for the §5 operators: {op: {method: impl}}.  "matmul",
+# "vector" and "blocked" share the unfused JAX implementations (the scan method
+# differs underneath); "kernel" entries are the fused Pallas launches, imported
+# lazily so importing repro.core never drags in pallas.
 _DISPATCH: Dict[str, Dict[str, Callable]] = {}
 
 
 def _register(op: str, *methods: str):
+    """Register the decorated function as ``op``'s impl for ``methods``."""
     def deco(fn):
+        """Add ``fn`` to the dispatch table and return it unchanged."""
         table = _DISPATCH.setdefault(op, {})
         for m in methods:
             table[m] = fn
@@ -51,7 +56,24 @@ def _register(op: str, *methods: str):
 
 
 def dispatch(op: str, method: str) -> Callable:
-    """Look up the implementation of ``op`` for ``method`` (raises ValueError)."""
+    """Look up the implementation of ``op`` for ``method``.
+
+    Args:
+        op: Operator name, e.g. ``"split"``, ``"radix_passes"``,
+            ``"top_p_tail"``.
+        method: One of ``METHODS``.
+
+    Returns:
+        The registered implementation callable.
+
+    Raises:
+        ValueError: If ``method`` is not in ``METHODS`` or ``op`` has no
+            implementation for it.
+
+    Example:
+        >>> dispatch("split", "vector").__name__
+        '_split_unfused'
+    """
     if method not in METHODS:
         raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")
     try:
@@ -65,7 +87,7 @@ def dispatch(op: str, method: str) -> Callable:
 # ---------------------------------------------------------------------------
 
 
-@_register("split", "matmul", "vector")
+@_register("split", "matmul", "vector", "blocked")
 def _split_unfused(x, flags, *, method, tile_s, interpret):
     """SplitInd via ``scan`` + XLA scatter (the scanned mask lives in HBM)."""
     n = x.shape[-1]
@@ -78,6 +100,7 @@ def _split_unfused(x, flags, *, method, tile_s, interpret):
     dest = jnp.where(flags, ex, n_true[..., None] + pos_false)
 
     def scatter_1d(dest1, x1):
+        """Scatter one row's payload and source indices to their destinations."""
         z = jnp.zeros_like(x1).at[dest1].set(x1)
         ind = jnp.zeros((n,), jnp.int32).at[dest1].set(iota)
         return z, ind
@@ -96,6 +119,7 @@ def _split_unfused(x, flags, *, method, tile_s, interpret):
 
 @_register("split", "kernel")
 def _split_fused(x, flags, *, method, tile_s, interpret):
+    """SplitInd as one fused Pallas launch per batch row."""
     from repro.kernels import ops as _kops
     return _kops.split_kernel(x, flags, s=tile_s, interpret=interpret)
 
@@ -103,11 +127,34 @@ def _split_fused(x, flags, *, method, tile_s, interpret):
 def split(x: jax.Array, flags: jax.Array, *, method: str = "matmul",
           return_indices: bool = True, tile_s: int = 128,
           interpret: Optional[bool] = None):
-    """Stable partition (paper's SplitInd): flagged elements first, order preserved.
+    """Stable partition (the paper's SplitInd): flagged elements first, order kept.
 
-    Returns ``(z, indices, n_true)``.  ``indices[j]`` is the original position of
-    ``z[j]``.  The destination offsets come from an exclusive scan of the int8 mask —
-    the paper's int8 -> int32 cube-unit mask-scan specialization.
+    The destination offsets come from an exclusive scan of the int8 mask — the
+    paper's int8 -> int32 cube-unit mask-scan specialization — so offsets are
+    exact integers for every ``method``.
+
+    Args:
+        x: Payload array ``(..., n)``, any dtype.
+        flags: Boolean array ``(..., n)``; true elements move to the front.
+        method: One of ``METHODS`` (``"kernel"`` fuses scan + scatter into one
+            launch; ``"blocked"`` runs the mask scan on the §4 pipeline).
+        return_indices: If false, omit the permutation from the result.
+        tile_s: Tile side ``s`` for the matmul scans.
+        interpret: Force Pallas interpret mode (defaults to auto: interpret on
+            CPU backends).
+
+    Returns:
+        ``(z, indices, n_true)`` — or ``(z, n_true)`` if ``return_indices`` is
+        false.  ``z`` is the partitioned payload, ``indices[j]`` the original
+        position of ``z[j]`` (int32), ``n_true`` the per-row count of flagged
+        elements (int32).
+
+    Example:
+        >>> import jax.numpy as jnp
+        >>> z, ind, k = split(jnp.asarray([10, 20, 30, 40]),
+        ...                   jnp.asarray([False, True, False, True]))
+        >>> z.tolist(), ind.tolist(), int(k)
+        ([20, 40, 10, 30], [1, 3, 0, 2], 2)
     """
     z, ind, n_true = dispatch("split", method)(
         x, flags, method=method, tile_s=tile_s, interpret=interpret)
@@ -119,9 +166,26 @@ def split(x: jax.Array, flags: jax.Array, *, method: str = "matmul",
 def compress(x: jax.Array, mask: jax.Array, *, method: str = "matmul",
              fill_value=0, tile_s: int = 128,
              interpret: Optional[bool] = None) -> Tuple[jax.Array, jax.Array]:
-    """``masked_select``: gather elements where ``mask`` is true, packed left.
+    """Masked select: gather elements where ``mask`` is true, packed left.
 
-    Returns ``(values, count)``; ``values[count:]`` is ``fill_value``.
+    Args:
+        x: Payload array ``(..., n)``.
+        mask: Boolean array ``(..., n)``.
+        method: One of ``METHODS``; forwarded to :func:`split`.
+        fill_value: Value for the ``values[count:]`` tail.
+        tile_s: Tile side ``s`` for the matmul scans.
+        interpret: Force Pallas interpret mode.
+
+    Returns:
+        ``(values, count)`` with ``values`` the same shape as ``x`` and
+        ``values[..., count:]`` filled with ``fill_value``.
+
+    Example:
+        >>> import jax.numpy as jnp
+        >>> v, k = compress(jnp.asarray([1, 2, 3, 4]),
+        ...                 jnp.asarray([True, False, True, False]))
+        >>> v.tolist(), int(k)
+        ([1, 3, 0, 0], 2)
     """
     z, _, n_true = split(x, mask, method=method, tile_s=tile_s,
                          interpret=interpret)
@@ -139,7 +203,23 @@ def compress(x: jax.Array, mask: jax.Array, *, method: str = "matmul",
 def float_to_sortable_int(x: jax.Array) -> jax.Array:
     """Order-preserving float -> unsigned encoding (paper's pre-processing phase).
 
-    Positive floats: flip the MSB.  Negative floats: flip all bits.
+    Positive floats: flip the MSB.  Negative floats: flip all bits.  The
+    resulting unsigned integers compare in the same order as the floats.
+
+    Args:
+        x: Float array (fp16, bf16 or fp32).
+
+    Returns:
+        ``uint16`` (for 16-bit floats) or ``uint32`` (for fp32) keys.
+
+    Raises:
+        TypeError: For unsupported float dtypes.
+
+    Example:
+        >>> import jax.numpy as jnp
+        >>> u = float_to_sortable_int(jnp.asarray([-1.0, 0.0, 1.0], jnp.float32))
+        >>> bool(u[0] < u[1] < u[2])
+        True
     """
     if x.dtype == jnp.float16:
         u = jax.lax.bitcast_convert_type(x, jnp.uint16)
@@ -157,7 +237,24 @@ def float_to_sortable_int(x: jax.Array) -> jax.Array:
 
 
 def sortable_int_to_float(u: jax.Array, dtype) -> jax.Array:
-    """Inverse of :func:`float_to_sortable_int` (paper's post-processing phase)."""
+    """Inverse of :func:`float_to_sortable_int` (paper's post-processing phase).
+
+    Args:
+        u: Unsigned keys produced by :func:`float_to_sortable_int`.
+        dtype: The original float dtype to decode back to.
+
+    Returns:
+        The decoded float array in ``dtype``.
+
+    Raises:
+        TypeError: For unsupported float dtypes.
+
+    Example:
+        >>> import jax.numpy as jnp
+        >>> u = float_to_sortable_int(jnp.asarray([-1.0, 0.5], jnp.float32))
+        >>> sortable_int_to_float(u, jnp.float32).tolist()
+        [-1.0, 0.5]
+    """
     dtype = jnp.dtype(dtype)
     if dtype in (jnp.dtype(jnp.float16), jnp.dtype(jnp.bfloat16)):
         msb = jnp.uint16(0x8000)
@@ -173,6 +270,7 @@ def sortable_int_to_float(u: jax.Array, dtype) -> jax.Array:
 
 
 def _encode_for_sort(x: jax.Array) -> Tuple[jax.Array, int, Callable]:
+    """Map ``x`` to unsigned keys; returns ``(keys, n_bits, decode_fn)``."""
     dt = x.dtype
     if jnp.issubdtype(dt, jnp.floating):
         enc = float_to_sortable_int(x)
@@ -194,7 +292,7 @@ def _encode_for_sort(x: jax.Array) -> Tuple[jax.Array, int, Callable]:
     raise TypeError(f"radix sort: unsupported dtype {dt}")
 
 
-@_register("radix_passes", "matmul", "vector")
+@_register("radix_passes", "matmul", "vector", "blocked")
 def _radix_passes_unfused(enc, bits, *, method, tile_s, interpret):
     """One ``split`` per bit; the permutation is composed with a gather."""
     n = enc.shape[-1]
@@ -212,6 +310,7 @@ def _radix_passes_unfused(enc, bits, *, method, tile_s, interpret):
 
 @_register("radix_passes", "kernel")
 def _radix_passes_fused(enc, bits, *, method, tile_s, interpret):
+    """All ``bits`` radix passes as fused Pallas launches."""
     from repro.kernels import ops as _kops
     return _kops.radix_sort_enc_kernel(enc, bits=bits, s=tile_s,
                                        interpret=interpret)
@@ -222,9 +321,30 @@ def radix_sort(x: jax.Array, *, descending: bool = False, method: str = "matmul"
                interpret: Optional[bool] = None):
     """Stable LSB radix sort built on scan-based splits (paper §5).
 
-    One split per bit (16 for fp16, 32 for fp32), each using the int8 mask scan;
-    ``method="kernel"`` chains digit extraction, the matmul split and the
+    One split per bit (16 for fp16/bf16, 32 for fp32), each using the int8 mask
+    scan; ``method="kernel"`` chains digit extraction, the matmul split and the
     permutation inside one fused ``radix_pass`` launch per bit.
+
+    Args:
+        x: Keys ``(..., n)``; floats (fp16/bf16/fp32) are sorted via the
+            order-preserving bit encoding, ints via a sign-bias encoding.
+        descending: Sort high-to-low (stability is preserved by complementing
+            the encoded keys).
+        method: One of ``METHODS``.
+        return_indices: If false, return only the sorted values.
+        tile_s: Tile side ``s`` for the mask scans.
+        interpret: Force Pallas interpret mode.
+
+    Returns:
+        ``(values, permutation)`` — or just ``values`` if ``return_indices``
+        is false.  ``permutation`` is int32 with ``values ==
+        take_along_axis(x, permutation, -1)``.
+
+    Example:
+        >>> import jax.numpy as jnp
+        >>> v, idx = radix_sort(jnp.asarray([3, -1, 2, -5], jnp.int8))
+        >>> v.tolist(), idx.tolist()
+        ([-5, -1, 2, 3], [3, 1, 2, 0])
     """
     enc, bits, decode = _encode_for_sort(x)
     if descending:
@@ -241,7 +361,24 @@ def radix_sort(x: jax.Array, *, descending: bool = False, method: str = "matmul"
 
 def sort(x: jax.Array, *, descending: bool = False, method: str = "matmul",
          tile_s: int = 128, interpret: Optional[bool] = None):
-    """PyTorch-style ``sort`` returning (values, indices); radix under the hood."""
+    """PyTorch-style ``sort`` returning ``(values, indices)``; radix under the hood.
+
+    Args:
+        x: Keys ``(..., n)`` (see :func:`radix_sort` for supported dtypes).
+        descending: Sort high-to-low.
+        method: One of ``METHODS``.
+        tile_s: Tile side ``s`` for the mask scans.
+        interpret: Force Pallas interpret mode.
+
+    Returns:
+        ``(values, indices)`` as in :func:`radix_sort`.
+
+    Example:
+        >>> import jax.numpy as jnp
+        >>> v, i = sort(jnp.asarray([2, 9, 4], jnp.int8), descending=True)
+        >>> v.tolist(), i.tolist()
+        ([9, 4, 2], [1, 2, 0])
+    """
     return radix_sort(x, descending=descending, method=method,
                       return_indices=True, tile_s=tile_s, interpret=interpret)
 
@@ -253,7 +390,24 @@ def sort(x: jax.Array, *, descending: bool = False, method: str = "matmul",
 
 def topk(x: jax.Array, k: int, *, method: str = "matmul", tile_s: int = 128,
          interpret: Optional[bool] = None):
-    """Top-k via descending radix sort (paper §5 implements it over SplitInd)."""
+    """Top-k via descending radix sort (paper §5 implements it over SplitInd).
+
+    Args:
+        x: Keys ``(..., n)``.
+        k: Number of leading elements to keep.
+        method: One of ``METHODS``.
+        tile_s: Tile side ``s`` for the mask scans.
+        interpret: Force Pallas interpret mode.
+
+    Returns:
+        ``(values, indices)`` of the ``k`` largest elements, sorted descending.
+
+    Example:
+        >>> import jax.numpy as jnp
+        >>> v, i = topk(jnp.asarray([1, 9, 3, 7], jnp.int8), 2)
+        >>> v.tolist(), i.tolist()
+        ([9, 7], [1, 3])
+    """
     values, idx = radix_sort(x, descending=True, method=method, tile_s=tile_s,
                              interpret=interpret)
     return values[..., :k], idx[..., :k]
@@ -264,9 +418,24 @@ def weighted_sample(w: jax.Array, key: jax.Array, *, method: str = "matmul",
                     tile_s: int = 128) -> jax.Array:
     """Inverse-transform sampling on the scanned CDF (paper §5).
 
-    The paper invokes SplitInd with predicate ``scan(w) > θ·Σw`` and reads the last
-    output index; counting ``scan(w) <= θ`` is the same index computed with the same
-    scan, without the extra data movement.
+    The paper invokes SplitInd with predicate ``scan(w) > θ·Σw`` and reads the
+    last output index; counting ``scan(w) <= θ`` is the same index computed
+    with the same scan, without the extra data movement.
+
+    Args:
+        w: Non-negative weights ``(..., n)`` (need not be normalized).
+        key: JAX PRNG key.
+        method: Scan method for the CDF, one of ``METHODS``.
+        cdf: Optional precomputed inclusive scan of ``w`` (skips the scan).
+        tile_s: Tile side ``s`` for the matmul scans.
+
+    Returns:
+        Sampled indices, shape ``w.shape[:-1]``, int32, in ``[0, n)``.
+
+    Example:
+        >>> import jax, jax.numpy as jnp
+        >>> int(weighted_sample(jnp.asarray([0.0, 0.0, 1.0]), jax.random.PRNGKey(0)))
+        2
     """
     if cdf is None:
         cdf = scan(w, axis=-1, method=method, tile_s=tile_s)
@@ -276,9 +445,9 @@ def weighted_sample(w: jax.Array, key: jax.Array, *, method: str = "matmul",
     return jnp.clip(idx, 0, w.shape[-1] - 1)
 
 
-@_register("top_p_tail", "matmul", "vector")
+@_register("top_p_tail", "matmul", "vector", "blocked")
 def _top_p_tail_unfused(sorted_p, key, *, p, method, tile_s, interpret):
-    """cumsum -> cutoff -> masked renormalised CDF -> inverse-transform sample."""
+    """Cumsum -> cutoff -> masked renormalised CDF -> inverse-transform sample."""
     cum = scan(sorted_p, axis=-1, method=method, tile_s=tile_s)
     cut = (cum - sorted_p) > p                    # llama3's sample_top_p formula
     masked = jnp.where(cut, 0.0, sorted_p)
@@ -287,6 +456,7 @@ def _top_p_tail_unfused(sorted_p, key, *, p, method, tile_s, interpret):
 
 @_register("top_p_tail", "kernel")
 def _top_p_tail_fused(sorted_p, key, *, p, method, tile_s, interpret):
+    """The whole nucleus-sampling tail as one Pallas launch."""
     from repro.kernels import ops as _kops
     u = jax.random.uniform(key, sorted_p.shape[:-1] + (1,), dtype=jnp.float32)
     return _kops.topp_mask_sample_kernel(sorted_p, u, p=p, interpret=interpret)
@@ -298,11 +468,33 @@ def top_p_sample(logits: jax.Array, key: jax.Array, p: float = 0.9,
                  interpret: Optional[bool] = None) -> jax.Array:
     """Nucleus sampling exactly as in the paper's Llama3 case study (§5, §6.5).
 
-    sort (radix, scan-based) -> prefix-sum of sorted probabilities -> mask tokens
-    whose *preceding* cumulative mass exceeds ``p`` -> renormalise -> weighted sample.
-    With fp16-style 16-bit keys this is the paper's "17 scans per batch row" operator;
-    ``method="kernel"`` runs the sort as fused radix passes and the whole sampling
-    tail as one Pallas launch.
+    Sort (radix, scan-based) -> prefix-sum of sorted probabilities -> mask
+    tokens whose *preceding* cumulative mass exceeds ``p`` -> renormalise ->
+    weighted sample.  With fp16-style 16-bit keys this is the paper's "17 scans
+    per batch row" operator; ``method="kernel"`` runs the sort as fused radix
+    passes and the whole sampling tail as one Pallas launch.
+
+    Args:
+        logits: Unnormalised scores ``(..., vocab)``; softmax is applied in
+            fp32.
+        key: JAX PRNG key.
+        p: Nucleus mass threshold in ``(0, 1]``.
+        temperature: Logit divisor applied before the softmax.
+        method: One of ``METHODS`` for the sort and sampling scans.
+        sort_method: ``"radix"`` (scan-based, on bf16-rounded keys = 16 splits
+            as in the paper's fp16 evaluation) or ``"xla"`` (baseline
+            ``argsort``).
+        tile_s: Tile side ``s`` for the mask scans.
+        interpret: Force Pallas interpret mode.
+
+    Returns:
+        Sampled token ids, shape ``logits.shape[:-1]``, int32.
+
+    Example:
+        >>> import jax, jax.numpy as jnp
+        >>> logits = jnp.asarray([[0.0, 20.0, 0.0, 0.0]])
+        >>> int(top_p_sample(logits, jax.random.PRNGKey(1), p=0.9)[0])
+        1
     """
     if temperature != 1.0:
         logits = logits / temperature

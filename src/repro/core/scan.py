@@ -16,8 +16,10 @@ Implements, in pure JAX (lowering to the TPU MXU via ``jnp.dot``):
 * A multi-level block scan (SSA structure, paper §2.1/§4.3) so arbitrary lengths run
   in linear work: tile-local scans (MXU) + a scan over the tile sums + broadcast add.
 
-dtype rules follow the paper's cube unit: ``int8 -> int32`` accumulation (mask scans),
-``bf16/f16 -> f32`` accumulation, everything else accumulates in its own dtype.
+Dtype rules follow the paper's cube unit: ``int8 -> int32`` accumulation (mask scans),
+``bf16/f16 -> f32`` accumulation, everything else accumulates in its own dtype.  See
+:func:`accum_dtype_for`; the full paper-section-to-module map lives in
+``docs/paper_map.md``.
 """
 from __future__ import annotations
 
@@ -38,6 +40,8 @@ __all__ = [
     "accum_dtype_for",
 ]
 
+METHODS = ("matmul", "vector", "kernel", "blocked")
+
 # ---------------------------------------------------------------------------
 # Constant matrices (paper notation: U_s, L_s, L⁻_s, 1_s)
 # ---------------------------------------------------------------------------
@@ -54,20 +58,69 @@ def _np_strictly_lower_ones(s: int) -> np.ndarray:
 
 
 def upper_ones(s: int, dtype=jnp.float32) -> jax.Array:
-    """U_s — upper triangular all-ones (including the main diagonal)."""
+    """Build ``U_s`` — upper triangular all-ones (including the main diagonal).
+
+    ``z @ U_s`` is the length-``s`` inclusive scan of a row vector ``z``; this
+    is the constant operand of the paper's cube-unit matmuls (Alg. 1 line 5).
+
+    Args:
+        s: Matrix order (the paper's tile side; 128 matches the MXU).
+        dtype: Element dtype the matrix is materialized in.
+
+    Returns:
+        An ``(s, s)`` array of the requested dtype.
+
+    Example:
+        >>> import jax.numpy as jnp
+        >>> upper_ones(3, jnp.int32).tolist()
+        [[1, 1, 1], [0, 1, 1], [0, 0, 1]]
+    """
     return jnp.asarray(_np_upper_ones(s), dtype=dtype)
 
 
 def strictly_lower_ones(s: int, dtype=jnp.float32) -> jax.Array:
-    """L⁻_s — strictly lower triangular all-ones (zero diagonal)."""
+    """Build ``L⁻_s`` — strictly lower triangular all-ones (zero diagonal).
+
+    ``L⁻_s @ v`` is the *exclusive* prefix of ``v``; it propagates row/tile
+    partials entirely on the matrix engine (paper Eq. 1, Alg. 2 line 12).
+
+    Args:
+        s: Matrix order.
+        dtype: Element dtype the matrix is materialized in.
+
+    Returns:
+        An ``(s, s)`` array of the requested dtype.
+
+    Example:
+        >>> import jax.numpy as jnp
+        >>> strictly_lower_ones(3, jnp.int32).tolist()
+        [[0, 0, 0], [1, 0, 0], [1, 1, 0]]
+    """
     return jnp.asarray(_np_strictly_lower_ones(s), dtype=dtype)
 
 
 def accum_dtype_for(dtype) -> jnp.dtype:
     """Accumulation dtype mirroring the Ascend cube unit I/O types.
 
-    int8 inputs accumulate in int32 (the paper's mask-scan specialization);
-    sub-fp32 floats accumulate in fp32 (cube f16 -> f32).
+    The cube unit widens narrow inputs while accumulating: int8/uint8/int16 and
+    bool inputs accumulate in int32 (the paper's mask-scan specialization used
+    by ``split``/``compress``), and sub-fp32 floats (bf16/f16) accumulate in
+    fp32.  Everything else accumulates in its own dtype.  Every ``scan``
+    method — including the ``jnp.cumsum`` vector baseline — returns this
+    dtype, which is what makes the methods bit-comparable.
+
+    Args:
+        dtype: Input element dtype (anything ``jnp.dtype`` accepts).
+
+    Returns:
+        The ``jnp.dtype`` scans over this input accumulate and return in.
+
+    Example:
+        >>> import jax.numpy as jnp
+        >>> str(accum_dtype_for(jnp.int8)), str(accum_dtype_for(jnp.bfloat16))
+        ('int32', 'float32')
+        >>> str(accum_dtype_for(jnp.float32))
+        'float32'
     """
     dtype = jnp.dtype(dtype)
     if dtype in (jnp.dtype(jnp.int8), jnp.dtype(jnp.uint8), jnp.dtype(jnp.int16),
@@ -84,11 +137,27 @@ def accum_dtype_for(dtype) -> jnp.dtype:
 
 
 def tile_scan_scanu(a: jax.Array, *, accum_dtype=None) -> jax.Array:
-    """ScanU tile step: ``A @ U_s`` + propagation of row partials.
+    """ScanU tile step (paper Alg. 1): ``A @ U_s`` + propagation of row partials.
 
-    ``a``: (..., s, s) row-major tiles.  Returns the *full* tile scan (the matmul
-    computes the s per-row local scans; propagation adds the exclusive cumsum of the
-    row sums — on TPU a log-depth VPU op rather than Ascend's serial vector loop).
+    The matmul computes the ``s`` per-row local scans; propagation then adds
+    the exclusive cumsum of the row sums — on TPU a log-depth VPU op rather
+    than Ascend's serial vector loop.
+
+    Args:
+        a: ``(..., s, s)`` row-major tile(s); a tile is the ``s×s`` matrix view
+            of ``ℓ = s²`` consecutive sequence elements.
+        accum_dtype: Accumulation dtype override; defaults to
+            ``accum_dtype_for(a.dtype)``.
+
+    Returns:
+        The full inclusive tile scan, shape ``(..., s, s)``, in the
+        accumulation dtype.
+
+    Example:
+        >>> import jax.numpy as jnp
+        >>> a = jnp.arange(1.0, 5.0).reshape(2, 2)   # the sequence 1,2,3,4
+        >>> tile_scan_scanu(a).tolist()
+        [[1.0, 3.0], [6.0, 10.0]]
     """
     s = a.shape[-1]
     acc = accum_dtype or accum_dtype_for(a.dtype)
@@ -100,11 +169,26 @@ def tile_scan_scanu(a: jax.Array, *, accum_dtype=None) -> jax.Array:
 
 
 def tile_scan_scanul1(a: jax.Array, *, accum_dtype=None) -> jax.Array:
-    """ScanUL1 tile step (paper Eq. 1): ``A@U + L⁻ @ (A@1)`` — matmuls only.
+    """ScanUL1 tile step (paper Alg. 2 / Eq. 1): ``A@U + L⁻ @ (A@1)`` — matmuls only.
 
     ``A @ 1_s`` is computed as a row-sum broadcast (identical result, avoids one
     explicit matmul operand load); the ``L⁻`` product runs on the MXU and plays the
     role of the cube accumulation-buffer step (Alg. 2 line 12).
+
+    Args:
+        a: ``(..., s, s)`` row-major tile(s).
+        accum_dtype: Accumulation dtype override; defaults to
+            ``accum_dtype_for(a.dtype)``.
+
+    Returns:
+        The full inclusive tile scan, shape ``(..., s, s)``, in the
+        accumulation dtype.
+
+    Example:
+        >>> import jax.numpy as jnp
+        >>> a = jnp.arange(1.0, 5.0).reshape(2, 2)
+        >>> tile_scan_scanul1(a).tolist()
+        [[1.0, 3.0], [6.0, 10.0]]
     """
     s = a.shape[-1]
     acc = accum_dtype or accum_dtype_for(a.dtype)
@@ -119,7 +203,7 @@ def tile_scan_scanul1(a: jax.Array, *, accum_dtype=None) -> jax.Array:
 
 
 def _operand_dtype(dtype) -> jnp.dtype:
-    """dtype in which the constant matrices / matmul operands are fed to the MXU."""
+    """Dtype in which the constant matrices / matmul operands are fed to the MXU."""
     dtype = jnp.dtype(dtype)
     if dtype in (jnp.dtype(jnp.int8), jnp.dtype(jnp.bool_), jnp.dtype(jnp.uint8)):
         return jnp.dtype(jnp.int8)
@@ -179,19 +263,63 @@ def scan(
     method: str = "matmul",
     variant: str = "scanul1",
     tile_s: int = 128,
+    block_tiles: int = 8,
     accum_dtype: Optional[jnp.dtype] = None,
 ) -> jax.Array:
     """Inclusive (or exclusive) prefix sum along ``axis``.
 
-    method:
-      * ``"matmul"`` — the paper's cube-unit algorithms (ScanU / ScanUL1 per
-        ``variant``) with SSA multi-level blocking.  This is the default and the
-        framework-wide cumsum used by MoE dispatch, sampling and the SSM layers.
-      * ``"vector"`` — plain ``jnp.cumsum`` (the paper's vector-only baseline).
-      * ``"kernel"`` — the fused Pallas TPU kernel (see ``repro.kernels``).
+    This is the framework-wide cumsum: the §5 operators (``split``, ``sort``,
+    ``top_p_sample``, …), MoE dispatch and the SSM layers all route through it.
+    The output dtype is always the accumulation dtype (``int8 -> int32``,
+    ``bf16/f16 -> f32``; see :func:`accum_dtype_for`) regardless of method,
+    which makes methods directly comparable.
+
+    Args:
+        x: Input array, any shape and any dtype :func:`accum_dtype_for` knows.
+        axis: Axis to scan along (scans always execute over the last axis; other
+            axes are moved there and back).
+        exclusive: If true, shift the result right by one with a leading zero.
+        reverse: If true, scan from the end (suffix sums).
+        method: Execution strategy, one of ``METHODS``:
+
+            * ``"matmul"`` — the paper's cube-unit algorithms (ScanU / ScanUL1
+              per ``variant``) as XLA matmuls with SSA multi-level blocking.
+              The default.
+            * ``"vector"`` — plain ``jnp.cumsum`` (the paper's vector-only
+              baseline).
+            * ``"kernel"`` — the fused sequential-grid Pallas kernel
+              (``repro.kernels.scan_mm``): one launch, tiles walked in order
+              with an SMEM-carried running partial.
+            * ``"blocked"`` — the three-phase multi-core pipeline of paper §4
+              (``repro.kernels.scan_pipeline``): parallel per-block partial
+              scans, a block-sum carry scan, and a fused carry broadcast-add,
+              so each element is read and written once.
+        variant: Tile algebra, ``"scanu"`` (Alg. 1, VPU row propagation) or
+            ``"scanul1"`` (Alg. 2 / Eq. 1, propagation as an ``L⁻`` matmul).
+        tile_s: Tile side ``s`` (a tile covers ``s²`` elements; 128 = MXU size).
+        block_tiles: Tiles per block for ``method="blocked"`` (ignored
+            otherwise); a block covers ``block_tiles * tile_s²`` elements.
+        accum_dtype: Accumulation dtype override; defaults to
+            ``accum_dtype_for(x.dtype)``.
+
+    Returns:
+        The scanned array, same shape as ``x``, in the accumulation dtype.
+
+    Raises:
+        ValueError: If ``method`` or ``variant`` is unknown.
+
+    Example:
+        >>> import jax.numpy as jnp
+        >>> [int(v) for v in scan(jnp.arange(1, 9, dtype=jnp.int32))]
+        [1, 3, 6, 10, 15, 21, 28, 36]
+        >>> out = scan(jnp.ones(10, jnp.int8), method="blocked", tile_s=8)
+        >>> out.dtype.name, int(out[-1])
+        ('int32', 10)
+        >>> [int(v) for v in scan(jnp.arange(1, 5, dtype=jnp.int32), exclusive=True)]
+        [0, 1, 3, 6]
     """
-    if method not in ("matmul", "vector", "kernel"):
-        raise ValueError(f"unknown scan method {method!r}")
+    if method not in METHODS:
+        raise ValueError(f"unknown scan method {method!r}; expected one of {METHODS}")
     if variant not in _TILE_FNS:
         raise ValueError(f"unknown scan variant {variant!r}")
     acc = jnp.dtype(accum_dtype) if accum_dtype is not None else accum_dtype_for(x.dtype)
@@ -207,6 +335,10 @@ def scan(
     elif method == "kernel":
         from repro.kernels import ops as _kops  # local import to avoid cycle
         out = _kops.scan_kernel(x, s=tile_s, variant=variant, accum_dtype=acc)
+    elif method == "blocked":
+        from repro.kernels import ops as _kops  # local import to avoid cycle
+        out = _kops.blocked_scan_kernel(x, s=tile_s, block_tiles=block_tiles,
+                                        variant=variant, accum_dtype=acc)
     else:
         out = _scan_last_axis_matmul(x, tile_s, variant, acc)
 
@@ -221,5 +353,20 @@ def scan(
 
 
 def cumsum(x: jax.Array, axis: int = -1, **kw) -> jax.Array:
-    """Drop-in ``jnp.cumsum`` replacement backed by the matmul scan."""
+    """Drop-in ``jnp.cumsum`` replacement backed by the matmul scan.
+
+    Args:
+        x: Input array.
+        axis: Axis to scan along.
+        **kw: Forwarded to :func:`scan` (``method=``, ``variant=``, …).
+
+    Returns:
+        ``scan(x, axis=axis, **kw)`` — inclusive prefix sums in the
+        accumulation dtype.
+
+    Example:
+        >>> import jax.numpy as jnp
+        >>> [int(v) for v in cumsum(jnp.asarray([1, 1, 2], jnp.int32))]
+        [1, 2, 4]
+    """
     return scan(x, axis=axis, **kw)

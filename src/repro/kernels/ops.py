@@ -7,11 +7,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.scan_mm import scan_tiles
+from repro.kernels.scan_pipeline import blocked_scan
 from repro.kernels.split_mm import radix_pass, split_tiles, topp_mask_sample_tiles
 from repro.kernels.ssd_chunk import ssd_chunk_scan
 
-__all__ = ["scan_kernel", "ssd_kernel", "split_kernel", "radix_sort_enc_kernel",
-           "topp_mask_sample_kernel"]
+__all__ = ["scan_kernel", "blocked_scan_kernel", "ssd_kernel", "split_kernel",
+           "radix_sort_enc_kernel", "topp_mask_sample_kernel"]
 
 
 @functools.partial(jax.jit, static_argnames=("s", "variant", "accum_dtype", "interpret"))
@@ -20,6 +21,16 @@ def scan_kernel(x: jax.Array, *, s: int = 128, variant: str = "scanul1",
     """Fused matmul-scan over the last axis (ScanU/ScanUL1, paper Alg. 1/2)."""
     return scan_tiles(x, s=s, variant=variant, accum_dtype=accum_dtype,
                       interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("s", "block_tiles", "variant",
+                                             "accum_dtype", "interpret"))
+def blocked_scan_kernel(x: jax.Array, *, s: int = 128, block_tiles: int = 8,
+                        variant: str = "scanul1", accum_dtype=None,
+                        interpret: bool | None = None) -> jax.Array:
+    """Three-phase blocked scan pipeline (paper §4 MCScan, one device)."""
+    return blocked_scan(x, s=s, block_tiles=block_tiles, variant=variant,
+                        accum_dtype=accum_dtype, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

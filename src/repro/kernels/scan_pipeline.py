@@ -1,0 +1,251 @@
+"""Blocked multi-core scan pipeline (paper §4, Alg. 3) as Pallas grid kernels.
+
+The paper's MCScan splits a length-``N`` input into ``B`` blocks and runs three
+phases across Ascend AI cores:
+
+  Phase 1  every block in parallel: the cube units compute a matmul *partial*
+           scan of the block while the vector units independently *recompute*
+           the block reduction ``r_i`` (so the reductions never wait on the
+           scans).
+  Phase 2  the ``B`` block sums are scanned (exclusive) to produce per-block
+           carries.
+  Phase 3  each block broadcast-adds its carry onto its partial scan.
+
+TPU mapping (one launch per phase, grid = blocks):
+
+* ``block_partial_sums`` — the phase-1 *vector recompute*: a cheap reduction
+  pass over the raw input (reads N elements, writes B scalars).  Keeping it a
+  separate launch is what lets the main kernel below be single-pass.
+* ``carry_scan`` — phase 2: an exclusive scan of the ``(batch, B)`` block sums
+  on the VPU (log-depth cumsum; B is tiny compared to N).
+* ``block_scan_carry`` — phases 1+3 *fused*: per-block matmul partial scans
+  (the ScanU/ScanUL1 tile algebra from :mod:`repro.core.scan`, generalized to
+  a rectangular ``m×s`` row-major block view) plus the carry broadcast-add in
+  the same launch.  Each element is read from HBM once and written once — on
+  Ascend the carry add is a separate vector-core pass over GM (two extra trips);
+  on TPU the MXU and VPU share VMEM so the add fuses behind the matmuls.
+
+Traffic: ``N`` (sum pass) + ``N`` read + ``N`` write + ``O(B)``, vs. the
+unfused 2 reads + 2 writes per element; the paper reports 74.9% of memcpy
+bandwidth for the fused pipeline, which ``benchmarks/run.py --only
+scan_pipeline`` tracks as ``memcpy_frac``.
+
+Block algebra (paper Eq. 1 on a rectangular block): with ``A`` the ``m×s``
+row-major view of one block, ``scan(A) = A@U_s + carry_rows(A@1_s)`` where
+``carry_rows`` is the exclusive prefix of the ``m`` row sums — a VPU cumsum for
+``variant="scanu"`` (Alg. 1) or a strictly-lower-triangular ``L⁻_m`` matvec on
+the MXU for ``variant="scanul1"`` (Alg. 2).
+
+dtype rules follow ``accum_dtype_for``: int8/bool masks accumulate in int32
+(the paper's mask-scan specialization), bf16/f16 in fp32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.scan import (
+    _operand_dtype,
+    accum_dtype_for,
+    strictly_lower_ones,
+    upper_ones,
+)
+
+__all__ = ["blocked_scan", "block_partial_sums", "carry_scan", "block_scan_carry"]
+
+
+def _default_interpret() -> bool:
+    """Interpret everywhere but TPU (one policy for all pipeline phases).
+
+    These kernels target Mosaic, and ``mcscan``'s default path must keep
+    working on CPU *and* GPU hosts, so non-TPU backends run the Pallas
+    interpreter rather than attempting a native lowering.
+    """
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Phase 1 (vector recompute): per-block reductions
+# ---------------------------------------------------------------------------
+
+
+def _block_sums_kernel(x_ref, o_ref, *, acc):
+    o_ref[0, 0] = jnp.sum(x_ref[0, 0].astype(acc))
+
+
+def block_partial_sums(blocks: jax.Array, *, accum_dtype=None,
+                       interpret: bool | None = None) -> jax.Array:
+    """Phase 1 reduction pass: block sums of ``(b, nb, m, s)`` -> ``(b, nb)``.
+
+    This is the paper's vector-unit *recompute* of the block reductions: it
+    reads the raw input once and has no data dependency on the partial scans,
+    so the scheduler can overlap it with (or run it ahead of) the main scan
+    launch.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    b, nb, m, s = blocks.shape
+    acc = jnp.dtype(accum_dtype) if accum_dtype is not None \
+        else accum_dtype_for(blocks.dtype)
+    return pl.pallas_call(
+        functools.partial(_block_sums_kernel, acc=acc),
+        grid=(b, nb),
+        in_specs=[pl.BlockSpec((1, 1, m, s), lambda i, j: (i, j, 0, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, nb), acc),
+        interpret=interpret,
+        name=f"scan_pipeline_block_sums_m{m}_s{s}",
+    )(blocks)
+
+
+# ---------------------------------------------------------------------------
+# Phase 2: exclusive scan of the block sums (the carries)
+# ---------------------------------------------------------------------------
+
+
+def _carry_scan_kernel(r_ref, o_ref):
+    row = r_ref[0, :]
+    inc = jnp.cumsum(row, axis=0)
+    o_ref[0, :] = jnp.concatenate([jnp.zeros((1,), row.dtype), inc[:-1]])
+
+
+def carry_scan(sums: jax.Array, *, interpret: bool | None = None) -> jax.Array:
+    """Phase 2: exclusive prefix of the ``(b, nb)`` block sums, per batch row.
+
+    ``nb`` is small (N / block_len), so a single log-depth VPU cumsum per batch
+    row suffices — the analogue of the paper's phase-2 scan of ``r`` in UB.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    b, nb = sums.shape
+    return pl.pallas_call(
+        _carry_scan_kernel,
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, nb), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, nb), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nb), sums.dtype),
+        interpret=interpret,
+        name=f"scan_pipeline_carry_scan_nb{nb}",
+    )(sums)
+
+
+# ---------------------------------------------------------------------------
+# Phases 1+3 fused: per-block matmul partial scan + carry broadcast-add
+# ---------------------------------------------------------------------------
+
+
+def _block_scan_scanu_kernel(x_ref, u_ref, c_ref, o_ref, *, acc):
+    a = x_ref[0, 0]                                        # (m, s) block view
+    local = jnp.dot(a, u_ref[...], preferred_element_type=acc).astype(acc)
+    row_sums = local[:, -1]                                # == A @ 1_s
+    row_prefix = jnp.cumsum(row_sums, axis=0) - row_sums   # exclusive, VPU
+    o_ref[0, 0] = local + row_prefix[:, None] + c_ref[0, 0]
+
+
+def _block_scan_scanul1_kernel(x_ref, u_ref, lm_ref, c_ref, o_ref, *, acc):
+    a = x_ref[0, 0]
+    local = jnp.dot(a, u_ref[...], preferred_element_type=acc).astype(acc)
+    row_sums = local[:, -1]
+    # Paper Eq. 1 on the rectangular block: L⁻_m @ (A @ 1_s) on the MXU.
+    row_prefix = jnp.dot(lm_ref[...].astype(acc), row_sums[:, None],
+                         preferred_element_type=acc)[:, 0]
+    o_ref[0, 0] = local + row_prefix[:, None] + c_ref[0, 0]
+
+
+def block_scan_carry(blocks: jax.Array, carries: jax.Array, *,
+                     variant: str = "scanul1", accum_dtype=None,
+                     interpret: bool | None = None) -> jax.Array:
+    """Fused phases 1+3: matmul partial scan of each block + carry add.
+
+    ``blocks``: ``(b, nb, m, s)`` row-major block views; ``carries``: ``(b,
+    nb)`` exclusive block prefixes from :func:`carry_scan`.  One grid step
+    reads its block from HBM once, runs the ScanU/ScanUL1 algebra in VMEM, adds
+    the block carry, and writes the final result once — the read/write-once
+    property the paper obtains by overlapping cube and vector units.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    b, nb, m, s = blocks.shape
+    acc = jnp.dtype(accum_dtype) if accum_dtype is not None \
+        else accum_dtype_for(blocks.dtype)
+    od = _operand_dtype(blocks.dtype)
+    u = upper_ones(s, od)
+    block_spec = pl.BlockSpec((1, 1, m, s), lambda i, j: (i, j, 0, 0))
+    carry_spec = pl.BlockSpec((1, 1), lambda i, j: (i, j))
+    if variant == "scanul1":
+        kern = functools.partial(_block_scan_scanul1_kernel, acc=acc)
+        operands = (blocks, u, strictly_lower_ones(m, od), carries)
+        in_specs = [block_spec,
+                    pl.BlockSpec((s, s), lambda i, j: (0, 0)),
+                    pl.BlockSpec((m, m), lambda i, j: (0, 0)),
+                    carry_spec]
+    elif variant == "scanu":
+        kern = functools.partial(_block_scan_scanu_kernel, acc=acc)
+        operands = (blocks, u, carries)
+        in_specs = [block_spec,
+                    pl.BlockSpec((s, s), lambda i, j: (0, 0)),
+                    carry_spec]
+    else:
+        raise ValueError(f"unknown scan variant {variant!r}")
+    return pl.pallas_call(
+        kern,
+        grid=(b, nb),
+        in_specs=in_specs,
+        out_specs=block_spec,
+        out_shape=jax.ShapeDtypeStruct((b, nb, m, s), acc),
+        interpret=interpret,
+        name=f"scan_pipeline_{variant}_m{m}_s{s}",
+    )(*operands)
+
+
+# ---------------------------------------------------------------------------
+# Full pipeline
+# ---------------------------------------------------------------------------
+
+
+def blocked_scan(x: jax.Array, *, s: int = 128, block_tiles: int = 8,
+                 variant: str = "scanul1", accum_dtype=None,
+                 interpret: bool | None = None) -> jax.Array:
+    """Scan the last axis of ``x`` with the three-phase blocked pipeline.
+
+    ``x``: ``(..., n)`` for any ``n >= 1`` (ragged tails are zero-padded to a
+    whole number of blocks and sliced off).  A block holds ``block_tiles``
+    tiles of ``ell = s*s`` elements, viewed as an ``(block_tiles*s, s)``
+    row-major matrix; ``block_tiles`` is clamped so a short input never pays
+    for more than one partially-filled block.  Returns the inclusive scan in
+    the accumulation dtype (``accum_dtype_for(x.dtype)`` unless overridden).
+    """
+    if variant not in ("scanu", "scanul1"):
+        raise ValueError(f"unknown scan variant {variant!r}")
+    if interpret is None:
+        interpret = _default_interpret()
+    acc = jnp.dtype(accum_dtype) if accum_dtype is not None \
+        else accum_dtype_for(x.dtype)
+    *lead, n = x.shape
+    xb = x.reshape(-1, n) if lead else x[None]
+    if xb.dtype == jnp.bool_:
+        xb = xb.astype(_operand_dtype(xb.dtype))
+    b = xb.shape[0]
+    ell = s * s
+    t = max(1, min(block_tiles, -(-n // ell)))   # tiles per block, clamped
+    m = t * s                                    # rows per block
+    block_len = m * s
+    pad = (-n) % block_len
+    if pad:
+        xb = jnp.pad(xb, ((0, 0), (0, pad)))
+    nb = xb.shape[-1] // block_len
+    blocks = xb.reshape(b, nb, m, s)
+    if nb == 1:
+        # Single block: the carry is provably zero — skip phases 1-2 entirely
+        # (saves a full extra read of the input plus two launches).
+        carries = jnp.zeros((b, 1), acc)
+    else:
+        sums = block_partial_sums(blocks, accum_dtype=acc, interpret=interpret)
+        carries = carry_scan(sums, interpret=interpret)
+    out = block_scan_carry(blocks, carries, variant=variant, accum_dtype=acc,
+                           interpret=interpret)
+    out = out.reshape(b, nb * block_len)[:, :n]
+    return out.reshape(*lead, n) if lead else out[0]

@@ -14,7 +14,7 @@ from repro.utils.sharding import use_mesh
 
 
 class ServeEngine:
-    SAMPLERS = ("greedy", "topp_scan", "topp_kernel", "topp_xla")
+    SAMPLERS = ("greedy", "topp_scan", "topp_kernel", "topp_blocked", "topp_xla")
 
     def __init__(self, cfg, params, *, mesh=None, max_len: int = 512,
                  top_p: float = 0.9, temperature: float = 1.0,
@@ -36,10 +36,12 @@ class ServeEngine:
     # ---- sampling (the paper's operator) ----
     def _sample(self, logits, key):
         """samplers: greedy | topp_scan (matmul scans) | topp_kernel (fused
-        Pallas radix passes + one-launch sampling tail) | topp_xla (baseline)."""
+        Pallas radix passes + one-launch sampling tail) | topp_blocked (scans
+        on the §4 blocked pipeline) | topp_xla (baseline)."""
         if self.sampler == "greedy":
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        method = "kernel" if self.sampler == "topp_kernel" else "matmul"
+        method = {"topp_kernel": "kernel", "topp_blocked": "blocked"}.get(
+            self.sampler, "matmul")
         sort_method = "xla" if self.sampler == "topp_xla" else "radix"
         return top_p_sample(logits, key, p=self.top_p,
                             temperature=self.temperature, method=method,

@@ -22,6 +22,22 @@ except AttributeError:  # pragma: no cover - depends on installed jax
     from jax.experimental.shard_map import shard_map  # noqa: F401
 
 
+def shard_map_unchecked(f, *, mesh, in_specs, out_specs):
+    """``shard_map`` with per-op replication checking off.
+
+    ``pallas_call`` has no replication rule (any jax we support), so bodies
+    that launch Pallas kernels — e.g. ``mcscan``'s fused blocked pipeline —
+    must disable the check.  The kwarg was renamed ``check_rep`` ->
+    ``check_vma`` across jax releases; try both.
+    """
+    try:
+        return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                         check_rep=False)
+    except TypeError:  # pragma: no cover - depends on installed jax
+        return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                         check_vma=False)
+
+
 def axis_size(axis_name):
     """Static size of a named mesh axis, inside ``shard_map``."""
     if hasattr(jax.lax, "axis_size"):

@@ -1,0 +1,171 @@
+"""Blocked three-phase scan pipeline (paper §4): parity with method="vector".
+
+Bit-identity strategy: float addition is associative over integer-valued
+payloads whose partial sums stay exactly representable (|sum| < 2^24 for an
+fp32 accumulator), so any summation order — jnp.cumsum, matmul tiles, the
+blocked pipeline — must produce the *same bits*.  That lets the parity tests
+assert exact equality for fp32 and bf16, not just int8, across ragged lengths
+and block shapes.  Gaussian payloads are additionally checked to tolerance.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import scan
+from repro.core.primitives import radix_sort, split, top_p_sample
+from repro.kernels.scan_pipeline import (
+    block_partial_sums, blocked_scan, carry_scan,
+)
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+DTYPES = ("float32", "bfloat16", "int8")
+# Ragged on purpose: primes, one-off-from-block-multiples, sub-tile lengths.
+LENGTHS = (1, 5, 63, 64, 257, 1000, 4096, 20000)
+
+
+def _payload(dtype, n, seed=0):
+    """Integer-valued payload in [-3, 3] — exact under any summation order."""
+    ints = np.random.default_rng(seed).integers(-3, 4, n)
+    if dtype == "int8":
+        return jnp.asarray(ints, jnp.int8)
+    return jnp.asarray(ints.astype(np.float32), jnp.dtype(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("n", LENGTHS)
+@pytest.mark.parametrize("s,block_tiles", [(8, 1), (8, 4), (16, 2)])
+def test_blocked_bit_identical_to_vector(dtype, n, s, block_tiles):
+    x = _payload(dtype, n, seed=n * s + block_tiles)
+    got = scan(x, method="blocked", tile_s=s, block_tiles=block_tiles)
+    ref = scan(x, method="vector")
+    assert got.dtype == ref.dtype
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@pytest.mark.parametrize("variant", ["scanu", "scanul1"])
+def test_blocked_variants_bit_identical(variant):
+    x = _payload("float32", 5000, seed=7)
+    got = scan(x, method="blocked", variant=variant, tile_s=8, block_tiles=2)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(scan(x, method="vector")))
+
+
+@pytest.mark.parametrize("variant", ["scanu", "scanul1"])
+def test_blocked_gaussian_close(variant):
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((3, 2777)), jnp.float32)
+    got = scan(x, method="blocked", variant=variant, tile_s=16, block_tiles=2)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.cumsum(np.asarray(x, np.float64), -1),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_blocked_axis_exclusive_reverse():
+    """The scan() wrapper plumbing (axis move / flip / shift) over the pipeline."""
+    x = _payload("float32", 3 * 257, seed=11).reshape(3, 257)
+    kw = dict(method="blocked", tile_s=8, block_tiles=2)
+    np.testing.assert_array_equal(
+        np.asarray(scan(x, axis=0, **kw)),
+        np.asarray(scan(x, axis=0, method="vector")))
+    np.testing.assert_array_equal(
+        np.asarray(scan(x, exclusive=True, **kw)),
+        np.asarray(scan(x, exclusive=True, method="vector")))
+    np.testing.assert_array_equal(
+        np.asarray(scan(x, reverse=True, **kw)),
+        np.asarray(scan(x, reverse=True, method="vector")))
+
+
+def test_blocked_carry_across_many_blocks():
+    """Carries must thread through a long chain of blocks exactly."""
+    x = jnp.ones((2, 8 * 8 * 40), jnp.float32)
+    out = scan(x, method="blocked", tile_s=8, block_tiles=1)
+    np.testing.assert_allclose(np.asarray(out)[:, -1], 8 * 8 * 40)
+
+
+def test_phase_kernels_individually():
+    """Phase 1 (block sums) and phase 2 (carry scan) in isolation."""
+    rng = np.random.default_rng(0)
+    blocks = jnp.asarray(rng.integers(-3, 4, (2, 5, 4, 8)), jnp.int8)
+    sums = block_partial_sums(blocks)
+    assert sums.shape == (2, 5) and sums.dtype == jnp.int32
+    np.testing.assert_array_equal(
+        np.asarray(sums), np.asarray(blocks, np.int32).sum((2, 3)))
+    carries = carry_scan(sums)
+    ref = np.cumsum(np.asarray(sums), -1) - np.asarray(sums)   # exclusive
+    np.testing.assert_array_equal(np.asarray(carries), ref)
+
+
+def test_blocked_scan_rejects_unknown_variant():
+    with pytest.raises(ValueError):
+        blocked_scan(jnp.ones(8), variant="nope")
+    with pytest.raises(ValueError):
+        scan(jnp.ones(8), method="nope")
+
+
+def test_operators_on_blocked_method():
+    """split / radix_sort / top_p_sample accept method="blocked" and match."""
+    import jax
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal(1000), jnp.float32)
+    f = jnp.asarray(rng.random(1000) < 0.5)
+    zv, iv, kv = split(x, f, method="vector")
+    zb, ib, kb = split(x, f, method="blocked", tile_s=8)
+    np.testing.assert_array_equal(np.asarray(zv), np.asarray(zb))
+    np.testing.assert_array_equal(np.asarray(iv), np.asarray(ib))
+    assert int(kv) == int(kb)
+    keys = jnp.asarray(rng.standard_normal(257), jnp.bfloat16)
+    _, pv = radix_sort(keys, method="vector")
+    _, pb = radix_sort(keys, method="blocked", tile_s=8)
+    np.testing.assert_array_equal(np.asarray(pv), np.asarray(pb))
+    logits = jnp.asarray(rng.standard_normal((2, 512)) * 3, jnp.float32)
+    tv = top_p_sample(logits, jax.random.PRNGKey(0), method="vector", tile_s=8)
+    tb = top_p_sample(logits, jax.random.PRNGKey(0), method="blocked", tile_s=8)
+    np.testing.assert_array_equal(np.asarray(tv), np.asarray(tb))
+
+
+def test_mcscan_blocked_multi_device():
+    """mcscan's default per-device path is the fused pipeline; parity on a CPU
+    mesh (device count is locked at jax init, so run in a subprocess)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    code = """
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import mcscan
+        from repro.utils.compat import make_mesh
+        mesh = make_mesh((8,), ("data",))
+        rng = np.random.default_rng(2)
+        # fp32, integer-valued -> bit-identical to the vector scan
+        xi = rng.integers(-3, 4, (2, 4096)).astype(np.float32)
+        out = mcscan(jnp.asarray(xi), mesh, "data", tile_s=8)
+        np.testing.assert_array_equal(np.asarray(out), np.cumsum(xi, -1))
+        # int8 mask -> int32, exact
+        m = (rng.random((1, 8192)) < 0.5).astype(np.int8)
+        om = mcscan(jnp.asarray(m), mesh, "data", tile_s=8)
+        assert om.dtype == jnp.int32
+        np.testing.assert_array_equal(np.asarray(om),
+                                      np.cumsum(m.astype(np.int32), -1))
+        # gaussian fp32 to tolerance, explicit blocked method + batch axis
+        mesh2 = make_mesh((4, 2), ("data", "model"))
+        xg = rng.standard_normal((2, 4096)).astype(np.float32)
+        og = mcscan(jnp.asarray(xg), mesh2, "data", method="blocked",
+                    tile_s=16, batch_axis_name="model")
+        np.testing.assert_allclose(np.asarray(og), np.cumsum(xg, -1),
+                                   rtol=1e-4, atol=1e-3)
+        # still exactly ONE small all-gather on the blocked path
+        f = jax.jit(lambda a: mcscan(a, mesh, "data", tile_s=8))
+        txt = f.lower(jnp.asarray(xg[:1])).compile().as_text()
+        ag = [l for l in txt.splitlines() if "= " in l and "all-gather(" in l]
+        assert len(ag) == 1, ag
+        print("MCSCAN-PIPELINE-OK")
+        """
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=520, env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "MCSCAN-PIPELINE-OK" in r.stdout

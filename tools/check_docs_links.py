@@ -1,0 +1,91 @@
+#!/usr/bin/env python
+"""Link checker for the docs subsystem (CI docs job; no dependencies).
+
+Validates, over ``docs/*.md`` and ``README.md``:
+
+* markdown links ``[text](target)`` whose target is a relative path — the file
+  must exist (http(s)/mailto/# anchors are skipped);
+* backtick code-span anchors of the form ``path/to/file.py:123`` or
+  ``path:12-34`` — the file must exist *and* be long enough, so the
+  ``docs/paper_map.md`` file:line anchors go stale loudly instead of silently.
+
+Exit code 0 when everything resolves, 1 with a report otherwise.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_ANCHOR = re.compile(
+    r"`([\w][\w./-]*\.(?:py|md|toml|yml|yaml|json)):(\d+)(?:-(\d+))?`")
+CODE_PATH = re.compile(r"`([\w][\w./-]*/[\w.-]+\.(?:py|md|toml|yml|yaml|json))`")
+
+
+def _check_file(md_path: str) -> list[str]:
+    errors = []
+    text = open(md_path, encoding="utf-8").read()
+    base = os.path.dirname(md_path)
+    rel = os.path.relpath(md_path, ROOT)
+
+    for m in MD_LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        resolved = os.path.normpath(os.path.join(base, path))
+        if not os.path.exists(resolved):
+            errors.append(f"{rel}: broken link -> {target}")
+
+    seen = set()
+    for m in CODE_ANCHOR.finditer(text):
+        path, lo, hi = m.group(1), int(m.group(2)), m.group(3)
+        hi = int(hi) if hi else lo
+        resolved = os.path.normpath(os.path.join(ROOT, path))
+        key = (path, lo, hi)
+        if key in seen:
+            continue
+        seen.add(key)
+        if not os.path.exists(resolved):
+            errors.append(f"{rel}: anchor to missing file -> {path}:{lo}")
+            continue
+        n_lines = sum(1 for _ in open(resolved, encoding="utf-8"))
+        if hi > n_lines:
+            errors.append(
+                f"{rel}: stale anchor -> {path}:{lo}"
+                f"{'-' + str(hi) if hi != lo else ''} (file has {n_lines} lines)")
+
+    for m in CODE_PATH.finditer(text):
+        path = m.group(1)
+        if any(ch in path for ch in "*{<"):
+            continue
+        resolved = os.path.normpath(os.path.join(ROOT, path))
+        if not os.path.exists(resolved):
+            errors.append(f"{rel}: reference to missing file -> {path}")
+
+    return errors
+
+
+def main() -> int:
+    targets = sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
+    targets.append(os.path.join(ROOT, "README.md"))
+    all_errors = []
+    for path in targets:
+        all_errors.extend(_check_file(path))
+    if all_errors:
+        print(f"{len(all_errors)} broken doc reference(s):")
+        for e in all_errors:
+            print(f"  {e}")
+        return 1
+    print(f"checked {len(targets)} file(s): all links and anchors resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
