@@ -17,6 +17,10 @@ the TPU-side projection lives in EXPERIMENTS.md §Roofline).
   scan_pipeline  blocked §4 pipeline: achieved bytes/s vs memcpy baseline
                  (the paper's headline 74.9%-of-memcpy metric) across methods
                  and dtypes -> BENCH_scan_pipeline.json
+  sort           radix-2^k sweep: method × dtype × bits_per_pass with
+                 pass-count and bytes-moved columns (plus a trace-only guard
+                 that the fused sort runs ceil(bits/k) passes)
+                 -> BENCH_sort.json
 """
 from __future__ import annotations
 
@@ -166,10 +170,15 @@ def fig10_compress(lens):
 
 
 def fig11_radix_sort(lens):
-    """Paper Fig. 11: fp16 radix sort (scan splits) vs jnp.sort baseline."""
+    """Paper Fig. 11: fp16 radix sort (scan splits) vs jnp.sort baseline.
+
+    Pinned to ``bits_per_pass=1`` — this figure reproduces the paper's
+    per-bit formulation; the multi-bit trajectory lives in the ``sort``
+    section (BENCH_sort.json).
+    """
     for n in lens:
         x = jnp.asarray(np.random.default_rng(3).standard_normal(n), jnp.float16)
-        t_ours = timeit(jax.jit(lambda a: radix_sort(a)[0]), x)
+        t_ours = timeit(jax.jit(lambda a: radix_sort(a, bits_per_pass=1)[0]), x)
         t_base = timeit(jax.jit(lambda a: jnp.sort(a)), x)
         row(f"fig11/radix_sort/n={n}", t_ours,
             f"baseline_us={t_base * 1e6:.1f};ratio={t_base / t_ours:.2f}x")
@@ -189,7 +198,12 @@ def fig12_batched_bandwidth():
 
 
 def fig13_top_p(quick=True):
-    """Paper Fig. 13: llama3-style top-p sampling, baseline vs scan-based."""
+    """Paper Fig. 13: llama3-style top-p sampling, baseline vs scan-based.
+
+    Pinned to ``bits_per_pass=1`` so the row's ``scans_per_batch=17`` (16
+    sort splits + 1 CDF scan) keeps meaning the paper's per-bit operator;
+    the multi-bit trajectory lives in the ``sort`` section.
+    """
     vocab = 32768 if quick else 131072
     for batch in (1, 4, 16):
         logits = jnp.asarray(
@@ -197,7 +211,8 @@ def fig13_top_p(quick=True):
             jnp.float32)
         key = jax.random.PRNGKey(0)
         ours = jax.jit(lambda l, k: top_p_sample(l, k, p=0.9,
-                                                 sort_method="radix"))
+                                                 sort_method="radix",
+                                                 bits_per_pass=1))
         base = jax.jit(lambda l, k: top_p_sample(l, k, p=0.9,
                                                  sort_method="xla"))
         t_ours = timeit(ours, logits, key, repeats=3, warmup=1)
@@ -248,6 +263,97 @@ def scan_pipeline_sweep(lens, smoke=False):
 
 
 # ---------------------------------------------------------------------------
+# sort: radix-2^k sweep — method × dtype × bits_per_pass (ISSUE 3 tentpole)
+# ---------------------------------------------------------------------------
+
+SORT_BITS_PER_PASS = (1, 2, 4, 8)
+_SORT_DTYPES = {  # dtype -> (sort bits, encoded key bytes)
+    "float32": (32, 4),
+    "bfloat16": (16, 2),
+    "int8": (8, 1),
+}
+
+
+def _count_radix_pass_launches(fn, *args) -> int:
+    """Count fused radix-pass ``pallas_call`` launches in ``fn``'s jaxpr.
+
+    Walks the jaxpr recursively (pjit bodies included) and counts every
+    pallas_call whose kernel name contains ``radix_pass`` — the guard that a
+    ``bits_per_pass=k`` sort really executes ``ceil(bits / k)`` fused passes
+    instead of silently falling back to per-bit splits.
+    """
+    def walk(jaxpr):
+        total = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                nm = eqn.params.get("name_and_src_info",
+                                    eqn.params.get("name", ""))
+                if "radix_pass" in str(nm):
+                    total += 1
+            for v in eqn.params.values():
+                if hasattr(v, "jaxpr"):       # ClosedJaxpr param
+                    total += walk(v.jaxpr)
+                elif hasattr(v, "eqns"):      # raw Jaxpr param
+                    total += walk(v)
+        return total
+
+    return walk(jax.make_jaxpr(fn)(*args).jaxpr)
+
+
+def sort_pass_count_guard():
+    """Assert the fused sort's launch count is exactly ``ceil(bits / k)``.
+
+    Trace-only (no execution), so it is cheap enough to run on every sweep;
+    a mismatch aborts the benchmark run with a non-zero exit — this is the
+    bench-smoke CI assertion against silent per-bit fallback.
+    """
+    x32 = jnp.asarray(np.random.default_rng(0).standard_normal(256),
+                      jnp.float32)
+    x16 = x32.astype(jnp.bfloat16)
+    for dt_name, x, bits in (("float32", x32, 32), ("bfloat16", x16, 16)):
+        for k in SORT_BITS_PER_PASS:
+            want = -(-bits // k)
+            got = _count_radix_pass_launches(
+                lambda a, k=k: radix_sort(a, method="kernel",
+                                          bits_per_pass=k)[0], x)
+            row(f"sort/pass_count/{dt_name}/k={k}", 0.0,
+                f"passes={got};expected={want}")
+            if got != want:
+                raise SystemExit(
+                    f"sort pass-count guard: {dt_name} bits_per_pass={k} "
+                    f"executed {got} fused passes, expected {want}")
+
+
+def sort_sweep(lens):
+    """Radix-2^k sort sweep: method × dtype × bits_per_pass -> BENCH_sort.json.
+
+    ``passes`` is ``ceil(bits / k)``; ``bytes_moved`` models the HBM traffic
+    of the chained passes — every pass reads and writes both the keys and the
+    int32 permutation, i.e. ``passes * n * (key_bytes + 4) * 2`` — so
+    ``bits_per_pass=4`` shows the ~4x traffic cut over per-bit splits on the
+    same row.  The trace-only pass-count guard runs first.
+    """
+    sort_pass_count_guard()
+    methods = ("vector", "matmul", "kernel")
+    for dt_name, (bits, key_bytes) in _SORT_DTYPES.items():
+        for n in lens:
+            x = _op_payload(dt_name, n, seed=6)
+            for m in methods:
+                base = None
+                for k in SORT_BITS_PER_PASS:
+                    passes = -(-bits // k)
+                    bytes_moved = passes * n * (key_bytes + 4) * 2
+                    fn = jax.jit(lambda a, m=m, k=k: radix_sort(
+                        a, method=m, bits_per_pass=k)[0])
+                    t = timeit(fn, x, repeats=3, warmup=1)
+                    base = base or t
+                    row(f"sort/{dt_name}/n={n}/{m}/k={k}", t,
+                        f"passes={passes};bytes_moved={bytes_moved};"
+                        f"GB/s={bytes_moved / t / 1e9:.2f};"
+                        f"speedup_vs_k1={base / t:.2f}x")
+
+
+# ---------------------------------------------------------------------------
 # Operator benchmarks: split / sort / top-p across methods and dtypes
 # (tracks the fused-kernel trajectory, not just raw scan — ISSUE 1 tentpole)
 # ---------------------------------------------------------------------------
@@ -277,7 +383,7 @@ def ops_split(n: int):
 
 
 def ops_sort(n: int, dtypes=("bfloat16", "float32")):
-    """Radix sort (16/32 fused passes) across methods × key widths."""
+    """Radix sort as shipped (default ``bits_per_pass=4``) across methods × key widths."""
     for dt in dtypes:
         x = _op_payload(dt, n, seed=2)
         bits = 16 if dt == "bfloat16" else 32
@@ -333,12 +439,13 @@ def main() -> None:
         "fig12": fig12_batched_bandwidth,
         "fig13": lambda: fig13_top_p(quick=not args.full),
         "scan_pipeline": lambda: scan_pipeline_sweep(lens, smoke=args.smoke),
+        "sort": lambda: sort_sweep([512] if args.smoke else lens[:2]),
         "ops": lambda: ops_operators(smoke=args.smoke),
     }
     only = set(args.only.split(",")) if args.only else None
     if args.smoke and only is None:
-        # fast, single-process sections
-        only = {"fig3", "fig10", "fig11", "scan_pipeline", "ops"}
+        # fast, single-process sections (sort carries the pass-count guard)
+        only = {"fig3", "fig10", "fig11", "scan_pipeline", "sort", "ops"}
     print("name,us_per_call,derived")
     for name, fn in sections.items():
         if only and name not in only:

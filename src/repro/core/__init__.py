@@ -5,6 +5,7 @@ from repro.core.scan import (
 )
 from repro.core.distributed import mcscan, mcscan_local
 from repro.core.primitives import (
-    split, compress, radix_sort, sort, topk, top_p_sample, weighted_sample,
+    split, multi_split, compress, radix_sort, sort, topk, top_p_sample,
+    weighted_sample,
 )
 from repro.core.ssd import ssd_scan, ssd_scan_ref, mlstm_chunked, mlstm_ref

@@ -12,9 +12,14 @@ Every operator takes ``method=`` and routes through a single table:
   inputs where read/write-once traffic dominates.
 
 The ``"kernel"`` and ``"blocked"`` paths are bit-identical to ``"vector"`` for
-split / compress / radix_sort / sort / topk / top_p_sample (mask-scan offsets
-are int8 -> int32 and therefore exact; the fused top-p tail keeps its prefix
-sums on the VPU cumsum).
+split / multi_split / compress / radix_sort / sort / topk / top_p_sample
+(mask-scan offsets are int8 -> int32 and therefore exact; the fused top-p tail
+keeps its prefix sums on the VPU cumsum).  The sort-based operators take
+``bits_per_pass`` (default 4): each radix pass is a stable ``2^k``-way
+``multi_split`` retiring ``k`` bits, so fp32 keys sort in ``32 / k`` passes
+instead of 32 — every (method, bits_per_pass) combination stays bit-identical
+to ``method="vector"`` with ``bits_per_pass=1`` because bucket offsets remain
+exact int8 -> int32 mask scans.
 
 Shapes are static (JAX): operators that logically return a variable number of
 elements (compress/split) return a full-size array plus a count, with the tail
@@ -30,9 +35,9 @@ import jax.numpy as jnp
 from repro.core.scan import METHODS, scan
 
 __all__ = [
-    "split", "compress", "radix_sort", "sort", "topk", "top_p_sample",
-    "weighted_sample", "float_to_sortable_int", "sortable_int_to_float",
-    "dispatch", "METHODS",
+    "split", "multi_split", "compress", "radix_sort", "sort", "topk",
+    "top_p_sample", "weighted_sample", "float_to_sortable_int",
+    "sortable_int_to_float", "dispatch", "METHODS",
 ]
 
 # METHODS is re-exported from repro.core.scan — one source for the contract.
@@ -83,6 +88,72 @@ def dispatch(op: str, method: str) -> Callable:
 
 
 # ---------------------------------------------------------------------------
+# shared unfused plumbing: dtype-stable gather + batched destination scatter
+# ---------------------------------------------------------------------------
+
+
+def _take_along_last(x, idx):
+    """Gather ``x`` along the last axis with indices widened to int32.
+
+    The single gather helper shared by the unfused operator paths (bucket-base
+    lookup in :func:`_multi_split_dest`) and the fused wrappers (the ordering
+    gathers in :func:`top_p_sample`): indices are cast to int32 in exactly one
+    place, so permutation composition is dtype-stable regardless of how the
+    caller produced its index array.
+
+    Args:
+        x: Source array ``(..., n)`` (any dtype).
+        idx: Integer indices, broadcast-compatible with ``x`` along the last
+            axis.
+
+    Returns:
+        ``jnp.take_along_axis(x, idx.astype(int32), axis=-1)``.
+
+    Example:
+        >>> import jax.numpy as jnp
+        >>> _take_along_last(jnp.asarray([10, 20, 30]),
+        ...                  jnp.asarray([2, 0, 1], jnp.int8)).tolist()
+        [30, 10, 20]
+    """
+    return jnp.take_along_axis(x, idx.astype(jnp.int32), axis=-1)
+
+
+def _scatter_payloads(payloads, dest, *, with_indices):
+    """Scatter each ``(..., n)`` payload to per-row destinations ``dest``.
+
+    The one scatter used by every unfused split-family operator.  ``dest``
+    must be a permutation of ``0..n-1`` per row.  With ``with_indices`` an
+    extra int32 array is appended holding the original position of every
+    output element (the identity iota is materialised once, not per caller).
+
+    Args:
+        payloads: Tuple of arrays shaped like ``dest``.
+        dest: int32 destination offsets ``(..., n)``.
+        with_indices: Append the original-index permutation to the result.
+
+    Returns:
+        Tuple of scattered payloads (same order), plus the permutation last
+        when ``with_indices``.
+    """
+    n = dest.shape[-1]
+    iota = jnp.arange(n, dtype=jnp.int32)
+
+    def scatter_1d(dest1, *rows):
+        """Scatter one row of every payload (and optionally the iota)."""
+        outs = tuple(jnp.zeros_like(r).at[dest1].set(r) for r in rows)
+        if with_indices:
+            outs += (jnp.zeros((n,), jnp.int32).at[dest1].set(iota),)
+        return outs
+
+    batch = dest.shape[:-1]
+    if batch:
+        flat = [p.reshape(-1, n) for p in payloads]
+        outs = jax.vmap(scatter_1d)(dest.reshape(-1, n), *flat)
+        return tuple(o.reshape(*batch, n) for o in outs)
+    return scatter_1d(dest, *payloads)
+
+
+# ---------------------------------------------------------------------------
 # split / compress
 # ---------------------------------------------------------------------------
 
@@ -98,22 +169,7 @@ def _split_unfused(x, flags, *, method, tile_s, interpret):
     iota = jnp.arange(n, dtype=jnp.int32)
     pos_false = iota - ex                                        # falses before i
     dest = jnp.where(flags, ex, n_true[..., None] + pos_false)
-
-    def scatter_1d(dest1, x1):
-        """Scatter one row's payload and source indices to their destinations."""
-        z = jnp.zeros_like(x1).at[dest1].set(x1)
-        ind = jnp.zeros((n,), jnp.int32).at[dest1].set(iota)
-        return z, ind
-
-    batch = x.shape[:-1]
-    if batch:
-        flat_dest = dest.reshape(-1, n)
-        flat_x = x.reshape(-1, n)
-        z, ind = jax.vmap(scatter_1d)(flat_dest, flat_x)
-        z = z.reshape(*batch, n)
-        ind = ind.reshape(*batch, n)
-    else:
-        z, ind = scatter_1d(dest, x)
+    z, ind = _scatter_payloads((x,), dest, with_indices=True)
     return z, ind, n_true
 
 
@@ -193,6 +249,106 @@ def compress(x: jax.Array, mask: jax.Array, *, method: str = "matmul",
     keep = iota < n_true[..., None]
     z = jnp.where(keep, z, jnp.asarray(fill_value, z.dtype))
     return z, n_true
+
+
+# ---------------------------------------------------------------------------
+# multi_split (radix-2^k generalization of SplitInd)
+# ---------------------------------------------------------------------------
+
+
+def _multi_split_dest(digits, num_buckets, *, method, tile_s):
+    """Destination offsets for a stable ``num_buckets``-way split.
+
+    One *batched* exclusive :func:`~repro.core.scan.scan` call over the
+    ``(..., R, n)`` int8 one-hot digit matrix yields all ``R`` per-bucket mask
+    scans at once (the multi-way analogue of the paper's binary SplitInd mask
+    scan); per-bucket bases are the tiny ``R``-wide exclusive prefix of the
+    bucket counts.
+
+    Args:
+        digits: Integer bucket ids ``(..., n)`` in ``[0, num_buckets)``.
+        num_buckets: Number of buckets ``R``.
+        method: Scan method for the mask scans, one of ``METHODS``.
+        tile_s: Tile side ``s`` for the matmul scans.
+
+    Returns:
+        ``(dest, counts)`` — int32 destination offsets ``(..., n)`` and int32
+        per-bucket counts ``(..., num_buckets)``.
+    """
+    d32 = digits.astype(jnp.int32)
+    buckets = jnp.arange(num_buckets, dtype=jnp.int32)
+    oh = (d32[..., None, :] == buckets[:, None]).astype(jnp.int8)  # (..., R, n)
+    ex = scan(oh, axis=-1, exclusive=True, method=method, tile_s=tile_s)
+    counts = ex[..., -1] + oh[..., -1].astype(jnp.int32)           # (..., R)
+    base = jnp.cumsum(counts, axis=-1) - counts                    # R-wide scan
+    ex_d = jnp.take_along_axis(ex, d32[..., None, :], axis=-2)[..., 0, :]
+    dest = _take_along_last(base, d32) + ex_d
+    return dest, counts
+
+
+@_register("multi_split", "matmul", "vector", "blocked")
+def _multi_split_unfused(x, digits, num_buckets, *, method, tile_s, interpret):
+    """Multi-way SplitInd via one batched ``scan`` + XLA scatter."""
+    dest, counts = _multi_split_dest(digits, num_buckets, method=method,
+                                     tile_s=tile_s)
+    z, ind = _scatter_payloads((x,), dest, with_indices=True)
+    return z, ind, counts
+
+
+@_register("multi_split", "kernel")
+def _multi_split_fused(x, digits, num_buckets, *, method, tile_s, interpret):
+    """Multi-way SplitInd as one fused Pallas launch per batch row."""
+    from repro.kernels import ops as _kops
+    return _kops.multi_split_kernel(x, digits, num_buckets=num_buckets,
+                                    s=tile_s, interpret=interpret)
+
+
+def multi_split(x: jax.Array, digits: jax.Array, num_buckets: int, *,
+                method: str = "matmul", return_indices: bool = True,
+                tile_s: int = 128, interpret: Optional[bool] = None):
+    """Stable ``num_buckets``-way partition — radix-2^k SplitInd.
+
+    Generalizes the paper's binary SplitInd: elements are grouped by their
+    integer ``digits`` bucket (ascending, original order kept within each
+    bucket), with all ``R`` bucket mask scans running as one batched int8 ->
+    int32 matmul scan — the TCU-style multi-way split of Dakkak et al. that
+    lets one radix pass retire ``log2(R)`` bits.  Offsets are exact integers
+    for every ``method``, so all methods are bit-identical.
+
+    Args:
+        x: Payload array ``(..., n)``, any dtype.
+        digits: Integer array ``(..., n)`` of bucket ids in
+            ``[0, num_buckets)`` (values outside the range are undefined
+            behaviour).
+        num_buckets: Number of buckets ``R >= 1``.
+        method: One of ``METHODS`` (``"kernel"`` fuses the one-hot build, the
+            batched mask scan, offsets and the scatter into one launch).
+        return_indices: If false, omit the permutation from the result.
+        tile_s: Tile side ``s`` for the matmul scans.
+        interpret: Force Pallas interpret mode (defaults to auto: interpret on
+            CPU backends).
+
+    Returns:
+        ``(z, indices, counts)`` — or ``(z, counts)`` if ``return_indices``
+        is false.  ``z`` is the bucket-grouped payload, ``indices[j]`` the
+        original position of ``z[j]`` (int32), ``counts`` the per-bucket
+        element counts, shape ``(..., num_buckets)`` (int32).
+
+    Example:
+        >>> import jax.numpy as jnp
+        >>> z, ind, c = multi_split(jnp.asarray([50, 10, 70, 30]),
+        ...                         jnp.asarray([2, 0, 2, 1]), 4)
+        >>> z.tolist(), ind.tolist(), c.tolist()
+        ([10, 30, 50, 70], [1, 3, 0, 2], [1, 1, 2, 0])
+    """
+    if num_buckets < 1:
+        raise ValueError(f"num_buckets must be >= 1, got {num_buckets}")
+    z, ind, counts = dispatch("multi_split", method)(
+        x, digits, num_buckets, method=method, tile_s=tile_s,
+        interpret=interpret)
+    if return_indices:
+        return z, ind, counts
+    return z, counts
 
 
 # ---------------------------------------------------------------------------
@@ -293,37 +449,51 @@ def _encode_for_sort(x: jax.Array) -> Tuple[jax.Array, int, Callable]:
 
 
 @_register("radix_passes", "matmul", "vector", "blocked")
-def _radix_passes_unfused(enc, bits, *, method, tile_s, interpret):
-    """One ``split`` per bit; the permutation is composed with a gather."""
+def _radix_passes_unfused(enc, bits, *, method, tile_s, interpret,
+                          bits_per_pass=1):
+    """``ceil(bits / k)`` multi-way splits, keys and permutation co-scattered.
+
+    The identity permutation is materialised once (hoisted out of the pass
+    loop) and scattered *alongside* the keys through each pass's destination
+    offsets — no per-pass iota rebuild and no per-pass gather composition.
+    """
     n = enc.shape[-1]
     perm = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), enc.shape)
     work = enc
-    one = jnp.asarray(1, enc.dtype)
-    for b in range(bits):
-        bit = (work >> b) & one
-        flags = bit == 0                     # zeros first (LSB ascending pass)
-        work, ind, _ = split(work, flags, method=method, tile_s=tile_s,
-                             interpret=interpret)
-        perm = jnp.take_along_axis(perm, ind, axis=-1)
+    for shift in range(0, bits, bits_per_pass):
+        k = min(bits_per_pass, bits - shift)
+        mask = jnp.asarray((1 << k) - 1, work.dtype)
+        digits = ((work >> shift) & mask).astype(jnp.int32)
+        dest, _ = _multi_split_dest(digits, 1 << k, method=method,
+                                    tile_s=tile_s)
+        work, perm = _scatter_payloads((work, perm), dest, with_indices=False)
     return work, perm
 
 
 @_register("radix_passes", "kernel")
-def _radix_passes_fused(enc, bits, *, method, tile_s, interpret):
-    """All ``bits`` radix passes as fused Pallas launches."""
+def _radix_passes_fused(enc, bits, *, method, tile_s, interpret,
+                        bits_per_pass=1):
+    """All radix passes as fused Pallas launches, ``bits_per_pass`` bits each."""
     from repro.kernels import ops as _kops
-    return _kops.radix_sort_enc_kernel(enc, bits=bits, s=tile_s,
+    return _kops.radix_sort_enc_kernel(enc, bits=bits,
+                                       bits_per_pass=bits_per_pass, s=tile_s,
                                        interpret=interpret)
 
 
 def radix_sort(x: jax.Array, *, descending: bool = False, method: str = "matmul",
                return_indices: bool = True, tile_s: int = 128,
-               interpret: Optional[bool] = None):
-    """Stable LSB radix sort built on scan-based splits (paper §5).
+               bits_per_pass: int = 4, interpret: Optional[bool] = None):
+    """Stable LSB radix sort built on scan-based multi-way splits (paper §5).
 
-    One split per bit (16 for fp16/bf16, 32 for fp32), each using the int8 mask
-    scan; ``method="kernel"`` chains digit extraction, the matmul split and the
-    permutation inside one fused ``radix_pass`` launch per bit.
+    Each pass is a stable ``2^bits_per_pass``-way :func:`multi_split` on a
+    ``bits_per_pass``-bit digit, so the key sorts in ``ceil(bits /
+    bits_per_pass)`` passes — 8 for fp32 and 4 for bf16/fp16 at the default
+    ``bits_per_pass=4``, vs. 32/16 binary splits in the paper's formulation —
+    a ``bits_per_pass``-fold cut in HBM round-trips of the (keys, permutation)
+    arrays.  ``method="kernel"`` chains digit extraction, the batched matmul
+    mask scans and the permutation inside one fused ``radix_pass_multibit``
+    launch per digit.  Every (method, bits_per_pass) combination is
+    bit-identical: bucket offsets are exact int8 -> int32 mask scans.
 
     Args:
         x: Keys ``(..., n)``; floats (fp16/bf16/fp32) are sorted via the
@@ -333,6 +503,9 @@ def radix_sort(x: jax.Array, *, descending: bool = False, method: str = "matmul"
         method: One of ``METHODS``.
         return_indices: If false, return only the sorted values.
         tile_s: Tile side ``s`` for the mask scans.
+        bits_per_pass: Bits retired per radix pass (``1..8``); ``1`` is the
+            paper's binary SplitInd formulation, ``4`` the radix-16 default.
+            A ragged final digit just uses the remaining bits.
         interpret: Force Pallas interpret mode.
 
     Returns:
@@ -340,17 +513,35 @@ def radix_sort(x: jax.Array, *, descending: bool = False, method: str = "matmul"
         is false.  ``permutation`` is int32 with ``values ==
         take_along_axis(x, permutation, -1)``.
 
+    Raises:
+        ValueError: If ``bits_per_pass`` is outside ``[1, 8]``.
+
     Example:
         >>> import jax.numpy as jnp
         >>> v, idx = radix_sort(jnp.asarray([3, -1, 2, -5], jnp.int8))
         >>> v.tolist(), idx.tolist()
         ([-5, -1, 2, 3], [3, 1, 2, 0])
+
+        ``bits_per_pass`` trades passes for bucket width without changing the
+        result — one radix-256 pass equals eight binary passes bit-for-bit:
+
+        >>> x = jnp.asarray([7, 200, 7, 13], jnp.uint8)
+        >>> v8, i8 = radix_sort(x, bits_per_pass=8)   # 1 pass of 256 buckets
+        >>> v1, i1 = radix_sort(x, bits_per_pass=1)   # 8 binary passes
+        >>> v8.tolist() == v1.tolist() == [7, 7, 13, 200]
+        True
+        >>> i8.tolist() == i1.tolist() == [0, 2, 3, 1]   # stable: first 7 first
+        True
     """
+    if not 1 <= bits_per_pass <= 8:
+        raise ValueError(
+            f"bits_per_pass must be in [1, 8], got {bits_per_pass}")
     enc, bits, decode = _encode_for_sort(x)
     if descending:
         enc = ~enc  # complement keeps stability while reversing the order
     work, perm = dispatch("radix_passes", method)(
-        enc, bits, method=method, tile_s=tile_s, interpret=interpret)
+        enc, bits, method=method, tile_s=tile_s, interpret=interpret,
+        bits_per_pass=min(bits_per_pass, bits))
     if descending:
         work = ~work
     values = decode(work)
@@ -360,7 +551,8 @@ def radix_sort(x: jax.Array, *, descending: bool = False, method: str = "matmul"
 
 
 def sort(x: jax.Array, *, descending: bool = False, method: str = "matmul",
-         tile_s: int = 128, interpret: Optional[bool] = None):
+         tile_s: int = 128, bits_per_pass: int = 4,
+         interpret: Optional[bool] = None):
     """PyTorch-style ``sort`` returning ``(values, indices)``; radix under the hood.
 
     Args:
@@ -368,6 +560,7 @@ def sort(x: jax.Array, *, descending: bool = False, method: str = "matmul",
         descending: Sort high-to-low.
         method: One of ``METHODS``.
         tile_s: Tile side ``s`` for the mask scans.
+        bits_per_pass: Bits retired per radix pass (see :func:`radix_sort`).
         interpret: Force Pallas interpret mode.
 
     Returns:
@@ -380,7 +573,8 @@ def sort(x: jax.Array, *, descending: bool = False, method: str = "matmul",
         ([9, 4, 2], [1, 2, 0])
     """
     return radix_sort(x, descending=descending, method=method,
-                      return_indices=True, tile_s=tile_s, interpret=interpret)
+                      return_indices=True, tile_s=tile_s,
+                      bits_per_pass=bits_per_pass, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -389,7 +583,7 @@ def sort(x: jax.Array, *, descending: bool = False, method: str = "matmul",
 
 
 def topk(x: jax.Array, k: int, *, method: str = "matmul", tile_s: int = 128,
-         interpret: Optional[bool] = None):
+         bits_per_pass: int = 4, interpret: Optional[bool] = None):
     """Top-k via descending radix sort (paper §5 implements it over SplitInd).
 
     Args:
@@ -397,6 +591,7 @@ def topk(x: jax.Array, k: int, *, method: str = "matmul", tile_s: int = 128,
         k: Number of leading elements to keep.
         method: One of ``METHODS``.
         tile_s: Tile side ``s`` for the mask scans.
+        bits_per_pass: Bits retired per radix pass (see :func:`radix_sort`).
         interpret: Force Pallas interpret mode.
 
     Returns:
@@ -409,7 +604,7 @@ def topk(x: jax.Array, k: int, *, method: str = "matmul", tile_s: int = 128,
         ([9, 7], [1, 3])
     """
     values, idx = radix_sort(x, descending=True, method=method, tile_s=tile_s,
-                             interpret=interpret)
+                             bits_per_pass=bits_per_pass, interpret=interpret)
     return values[..., :k], idx[..., :k]
 
 
@@ -465,14 +660,17 @@ def _top_p_tail_fused(sorted_p, key, *, p, method, tile_s, interpret):
 def top_p_sample(logits: jax.Array, key: jax.Array, p: float = 0.9,
                  temperature: float = 1.0, *, method: str = "matmul",
                  sort_method: str = "radix", tile_s: int = 128,
+                 bits_per_pass: int = 4,
                  interpret: Optional[bool] = None) -> jax.Array:
     """Nucleus sampling exactly as in the paper's Llama3 case study (§5, §6.5).
 
     Sort (radix, scan-based) -> prefix-sum of sorted probabilities -> mask
     tokens whose *preceding* cumulative mass exceeds ``p`` -> renormalise ->
     weighted sample.  With fp16-style 16-bit keys this is the paper's "17 scans
-    per batch row" operator; ``method="kernel"`` runs the sort as fused radix
-    passes and the whole sampling tail as one Pallas launch.
+    per batch row" operator; the default ``bits_per_pass=4`` sorts those keys
+    in 4 radix-16 passes instead of 16 binary splits.  ``method="kernel"``
+    runs the sort as fused radix passes and the whole sampling tail as one
+    Pallas launch.
 
     Args:
         logits: Unnormalised scores ``(..., vocab)``; softmax is applied in
@@ -481,10 +679,12 @@ def top_p_sample(logits: jax.Array, key: jax.Array, p: float = 0.9,
         p: Nucleus mass threshold in ``(0, 1]``.
         temperature: Logit divisor applied before the softmax.
         method: One of ``METHODS`` for the sort and sampling scans.
-        sort_method: ``"radix"`` (scan-based, on bf16-rounded keys = 16 splits
-            as in the paper's fp16 evaluation) or ``"xla"`` (baseline
+        sort_method: ``"radix"`` (scan-based, on bf16-rounded keys = 16 sort
+            bits as in the paper's fp16 evaluation) or ``"xla"`` (baseline
             ``argsort``).
         tile_s: Tile side ``s`` for the mask scans.
+        bits_per_pass: Bits retired per radix pass (see :func:`radix_sort`);
+            ignored for ``sort_method="xla"``.
         interpret: Force Pallas interpret mode.
 
     Returns:
@@ -500,14 +700,15 @@ def top_p_sample(logits: jax.Array, key: jax.Array, p: float = 0.9,
         logits = logits / temperature
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
     if sort_method == "radix":
-        # Sort on bf16-rounded keys (16 bits = 16 splits, as in the paper's fp16
+        # Sort on bf16-rounded keys (16 bits, as in the paper's fp16
         # evaluation); ties/rounding only reorder within ~3-ulp probability bands.
         keys16 = probs.astype(jnp.bfloat16)
         _, order = radix_sort(keys16, descending=True, method=method,
-                              tile_s=tile_s, interpret=interpret)
+                              tile_s=tile_s, bits_per_pass=bits_per_pass,
+                              interpret=interpret)
     else:
         order = jnp.argsort(-probs, axis=-1)
-    sorted_p = jnp.take_along_axis(probs, order, axis=-1)
+    sorted_p = _take_along_last(probs, order)
     j = dispatch("top_p_tail", method)(
         sorted_p, key, p=p, method=method, tile_s=tile_s, interpret=interpret)
-    return jnp.take_along_axis(order, j[..., None], axis=-1)[..., 0]
+    return _take_along_last(order, j[..., None])[..., 0]

@@ -1,5 +1,5 @@
 """Pallas TPU kernels for the paper's compute hot-spots (validated interpret=True)."""
 from repro.kernels.ops import (
     scan_kernel, blocked_scan_kernel, ssd_kernel, split_kernel,
-    radix_sort_enc_kernel, topp_mask_sample_kernel,
+    multi_split_kernel, radix_sort_enc_kernel, topp_mask_sample_kernel,
 )

@@ -8,11 +8,17 @@ import jax.numpy as jnp
 
 from repro.kernels.scan_mm import scan_tiles
 from repro.kernels.scan_pipeline import blocked_scan
-from repro.kernels.split_mm import radix_pass, split_tiles, topp_mask_sample_tiles
+from repro.kernels.split_mm import (
+    multi_split_tiles,
+    radix_pass_multibit,
+    split_tiles,
+    topp_mask_sample_tiles,
+)
 from repro.kernels.ssd_chunk import ssd_chunk_scan
 
 __all__ = ["scan_kernel", "blocked_scan_kernel", "ssd_kernel", "split_kernel",
-           "radix_sort_enc_kernel", "topp_mask_sample_kernel"]
+           "multi_split_kernel", "radix_sort_enc_kernel",
+           "topp_mask_sample_kernel"]
 
 
 @functools.partial(jax.jit, static_argnames=("s", "variant", "accum_dtype", "interpret"))
@@ -47,14 +53,25 @@ def split_kernel(x: jax.Array, flags: jax.Array, *, s: int = 128,
     return split_tiles(x, flags, s=s, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "s", "interpret"))
-def radix_sort_enc_kernel(enc: jax.Array, *, bits: int, s: int = 128,
-                          interpret: bool | None = None):
+@functools.partial(jax.jit, static_argnames=("num_buckets", "s", "interpret"))
+def multi_split_kernel(x: jax.Array, digits: jax.Array, *, num_buckets: int,
+                       s: int = 128, interpret: bool | None = None):
+    """Fused radix-2^k SplitInd: ``(z, indices, counts)`` in one launch/row."""
+    return multi_split_tiles(x, digits, num_buckets=num_buckets, s=s,
+                             interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bits_per_pass", "s",
+                                             "interpret"))
+def radix_sort_enc_kernel(enc: jax.Array, *, bits: int, bits_per_pass: int = 1,
+                          s: int = 128, interpret: bool | None = None):
     """Stable LSB radix sort of an unsigned encoding via fused radix passes.
 
     ``enc``: (..., n) unsigned keys (see ``primitives._encode_for_sort``).
-    Returns ``(sorted_enc, permutation)``.  One ``radix_pass`` launch per bit;
-    the tail is padded once with the maximum key so it stays at the end.
+    Returns ``(sorted_enc, permutation)``.  One ``radix_pass_multibit`` launch
+    per ``bits_per_pass``-bit digit — ``ceil(bits / bits_per_pass)`` launches
+    total (a ragged final digit just uses the remaining bits); the tail is
+    padded once with the maximum key so it stays at the end across passes.
     """
     *lead, n = enc.shape
     work = enc.reshape(-1, n)
@@ -65,8 +82,10 @@ def radix_sort_enc_kernel(enc: jax.Array, *, bits: int, s: int = 128,
         work = jnp.concatenate([work, fill], axis=-1)
     perm = jnp.broadcast_to(jnp.arange(work.shape[-1], dtype=jnp.int32),
                             work.shape)
-    for bit in range(bits):
-        work, perm = radix_pass(work, perm, shift=bit, s=s, interpret=interpret)
+    for shift in range(0, bits, bits_per_pass):
+        k = min(bits_per_pass, bits - shift)
+        work, perm = radix_pass_multibit(work, perm, shift=shift, pass_bits=k,
+                                         s=s, interpret=interpret)
     work = work[:, :n].reshape(*lead, n)
     perm = perm[:, :n].reshape(*lead, n)
     return work, perm

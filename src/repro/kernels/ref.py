@@ -26,10 +26,15 @@ def split_ref(x: jax.Array, flags: jax.Array):
 
 
 def radix_sort_enc_ref(enc: jax.Array, *, bits: int):
-    """Oracle for ``ops.radix_sort_enc_kernel``: unfused per-bit splits."""
+    """Oracle for ``ops.radix_sort_enc_kernel``: unfused per-bit splits.
+
+    Deliberately pinned to ``bits_per_pass=1`` — the paper's binary SplitInd
+    formulation is the ground truth every multi-bit pass count must match.
+    """
     from repro.core.primitives import dispatch
     return dispatch("radix_passes", "vector")(
-        enc, bits, method="vector", tile_s=128, interpret=None)
+        enc, bits, method="vector", tile_s=128, interpret=None,
+        bits_per_pass=1)
 
 
 def topp_mask_sample_ref(sorted_p: jax.Array, u: jax.Array, *, p: float):

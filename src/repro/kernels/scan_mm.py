@@ -23,12 +23,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.scan import accum_dtype_for, upper_ones, strictly_lower_ones
+from repro.core.scan import accum_dtype_for
 
 __all__ = ["scan_tiles", "scan_mm_kernel"]
 
 
-def _kernel(x_ref, u_ref, lm_ref, o_ref, carry_ref, *, variant: str, acc):
+def _kernel(x_ref, o_ref, carry_ref, *, variant: str, acc):
     t = pl.program_id(1)
 
     @pl.when(t == 0)
@@ -37,18 +37,25 @@ def _kernel(x_ref, u_ref, lm_ref, o_ref, carry_ref, *, variant: str, acc):
 
     a = x_ref[0, 0]                                   # (s, s) tile in VMEM
     s = a.shape[-1]
+    # U_s / L⁻_s are built in-register from iota comparisons (as split_mm
+    # does) instead of being streamed from HBM as constant operands on every
+    # launch — the only HBM traffic left is the tile itself.
+    ri = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    ci = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    u = (ri <= ci).astype(a.dtype)                    # U_s
     if variant == "scanul1":
         # Paper Eq. 1 — all three products on the MXU, C2 accumulated in place
         # (the L0C accumulation-buffer step of Alg. 2 line 12).
-        c2 = jnp.dot(a, u_ref[...], preferred_element_type=acc)
+        c2 = jnp.dot(a, u, preferred_element_type=acc)
         ones = jnp.ones((s, s), dtype=a.dtype)
         c1 = jnp.dot(a, ones, preferred_element_type=acc)
-        c2 = c2 + jnp.dot(lm_ref[...].astype(acc), c1, preferred_element_type=acc)
+        lm = (ri > ci).astype(acc)                    # L⁻_s
+        c2 = c2 + jnp.dot(lm, c1, preferred_element_type=acc)
         local = c2
     else:  # scanu
         # Alg. 1: one matmul for the s row-local scans; propagation of the row
         # partials on the VPU (log-depth cumsum; Ascend used a serial vector loop).
-        local = jnp.dot(a, u_ref[...], preferred_element_type=acc)
+        local = jnp.dot(a, u, preferred_element_type=acc)
         row_sums = local[:, -1]
         row_prefix = jnp.cumsum(row_sums, axis=0) - row_sums
         local = local + row_prefix[:, None]
@@ -60,22 +67,20 @@ def _kernel(x_ref, u_ref, lm_ref, o_ref, carry_ref, *, variant: str, acc):
 def scan_mm_kernel(variant: str, acc, s: int, interpret: bool):
     kern = functools.partial(_kernel, variant=variant, acc=acc)
 
-    def call(tiles: jax.Array, u: jax.Array, lm: jax.Array) -> jax.Array:
+    def call(tiles: jax.Array) -> jax.Array:
         b, nt = tiles.shape[0], tiles.shape[1]
         return pl.pallas_call(
             kern,
             grid=(b, nt),
             in_specs=[
                 pl.BlockSpec((1, 1, s, s), lambda i, j: (i, j, 0, 0)),
-                pl.BlockSpec((s, s), lambda i, j: (0, 0)),
-                pl.BlockSpec((s, s), lambda i, j: (0, 0)),
             ],
             out_specs=pl.BlockSpec((1, 1, s, s), lambda i, j: (i, j, 0, 0)),
             out_shape=jax.ShapeDtypeStruct((b, nt, s, s), acc),
             scratch_shapes=[pltpu.SMEM((1, 1), acc)],
             interpret=interpret,
             name=f"scan_mm_{variant}_s{s}",
-        )(tiles, u, lm)
+        )(tiles)
 
     return call
 
@@ -95,9 +100,6 @@ def scan_tiles(x: jax.Array, *, s: int = 128, variant: str = "scanul1",
         xb = jnp.pad(xb, ((0, 0), (0, pad)))
     nt = xb.shape[-1] // ell
     tiles = xb.reshape(b, nt, s, s)
-    od = tiles.dtype
-    u = upper_ones(s, od)
-    lm = strictly_lower_ones(s, od)
-    out = scan_mm_kernel(variant, acc, s, interpret)(tiles, u, lm)
+    out = scan_mm_kernel(variant, acc, s, interpret)(tiles)
     out = out.reshape(b, nt * ell)[:, :n]
     return out.reshape(*lead, n) if lead else out[0]

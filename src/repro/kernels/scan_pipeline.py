@@ -47,12 +47,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.scan import (
-    _operand_dtype,
-    accum_dtype_for,
-    strictly_lower_ones,
-    upper_ones,
-)
+from repro.core.scan import _operand_dtype, accum_dtype_for
 
 __all__ = ["blocked_scan", "block_partial_sums", "carry_scan", "block_scan_carry"]
 
@@ -137,20 +132,34 @@ def carry_scan(sums: jax.Array, *, interpret: bool | None = None) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def _block_scan_scanu_kernel(x_ref, u_ref, c_ref, o_ref, *, acc):
+def _upper_ones_in_register(s: int, dtype):
+    """``U_s`` from iota comparisons — no HBM constant operand per launch."""
+    ri = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    ci = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    return (ri <= ci).astype(dtype)
+
+
+def _block_scan_scanu_kernel(x_ref, c_ref, o_ref, *, acc):
     a = x_ref[0, 0]                                        # (m, s) block view
-    local = jnp.dot(a, u_ref[...], preferred_element_type=acc).astype(acc)
+    u = _upper_ones_in_register(a.shape[-1], a.dtype)
+    local = jnp.dot(a, u, preferred_element_type=acc).astype(acc)
     row_sums = local[:, -1]                                # == A @ 1_s
     row_prefix = jnp.cumsum(row_sums, axis=0) - row_sums   # exclusive, VPU
     o_ref[0, 0] = local + row_prefix[:, None] + c_ref[0, 0]
 
 
-def _block_scan_scanul1_kernel(x_ref, u_ref, lm_ref, c_ref, o_ref, *, acc):
+def _block_scan_scanul1_kernel(x_ref, c_ref, o_ref, *, acc):
     a = x_ref[0, 0]
-    local = jnp.dot(a, u_ref[...], preferred_element_type=acc).astype(acc)
+    m = a.shape[0]
+    u = _upper_ones_in_register(a.shape[-1], a.dtype)
+    local = jnp.dot(a, u, preferred_element_type=acc).astype(acc)
     row_sums = local[:, -1]
-    # Paper Eq. 1 on the rectangular block: L⁻_m @ (A @ 1_s) on the MXU.
-    row_prefix = jnp.dot(lm_ref[...].astype(acc), row_sums[:, None],
+    # Paper Eq. 1 on the rectangular block: L⁻_m @ (A @ 1_s) on the MXU;
+    # L⁻_m is likewise built in-register (strict lower triangle of ones).
+    ri = jax.lax.broadcasted_iota(jnp.int32, (m, m), 0)
+    ci = jax.lax.broadcasted_iota(jnp.int32, (m, m), 1)
+    lm = (ri > ci).astype(acc)
+    row_prefix = jnp.dot(lm, row_sums[:, None],
                          preferred_element_type=acc)[:, 0]
     o_ref[0, 0] = local + row_prefix[:, None] + c_ref[0, 0]
 
@@ -171,34 +180,26 @@ def block_scan_carry(blocks: jax.Array, carries: jax.Array, *,
     b, nb, m, s = blocks.shape
     acc = jnp.dtype(accum_dtype) if accum_dtype is not None \
         else accum_dtype_for(blocks.dtype)
-    od = _operand_dtype(blocks.dtype)
-    u = upper_ones(s, od)
     block_spec = pl.BlockSpec((1, 1, m, s), lambda i, j: (i, j, 0, 0))
     carry_spec = pl.BlockSpec((1, 1), lambda i, j: (i, j))
     if variant == "scanul1":
         kern = functools.partial(_block_scan_scanul1_kernel, acc=acc)
-        operands = (blocks, u, strictly_lower_ones(m, od), carries)
-        in_specs = [block_spec,
-                    pl.BlockSpec((s, s), lambda i, j: (0, 0)),
-                    pl.BlockSpec((m, m), lambda i, j: (0, 0)),
-                    carry_spec]
     elif variant == "scanu":
         kern = functools.partial(_block_scan_scanu_kernel, acc=acc)
-        operands = (blocks, u, carries)
-        in_specs = [block_spec,
-                    pl.BlockSpec((s, s), lambda i, j: (0, 0)),
-                    carry_spec]
     else:
         raise ValueError(f"unknown scan variant {variant!r}")
+    # U_s / L⁻_m are built in-register inside the kernels from iota
+    # comparisons, so the only operands streamed from HBM are the data blocks
+    # and the nb carries.
     return pl.pallas_call(
         kern,
         grid=(b, nb),
-        in_specs=in_specs,
+        in_specs=[block_spec, carry_spec],
         out_specs=block_spec,
         out_shape=jax.ShapeDtypeStruct((b, nb, m, s), acc),
         interpret=interpret,
         name=f"scan_pipeline_{variant}_m{m}_s{s}",
-    )(*operands)
+    )(blocks, carries)
 
 
 # ---------------------------------------------------------------------------

@@ -12,8 +12,17 @@ launch per batch row:
   no constant operand is streamed from HBM), destination offsets are computed
   on the VPU, and values + original indices are scattered — mask, offsets and
   destinations all stay in VMEM.
-* ``radix_pass``    — one LSB radix pass: digit extraction, the matmul split
-  and the permutation of (keys, permutation) chained in a single launch.
+* ``multi_split_tiles`` — radix-2^k generalization of SplitInd: a stable
+  ``R``-way bucket partition from one launch.  The ``(rows, R, s)`` int8
+  one-hot digit matrix is built in-register and all ``R`` bucket mask scans
+  run as a single batched ``A @ U_s`` MXU contraction; per-bucket bases come
+  from a tiny ``R``-wide scan of the bucket totals.  This is the same
+  matmul-scan trick Dakkak et al. use for TCU scans, applied to the paper's
+  binary SplitInd so one radix pass retires ``k = log2(R)`` bits.
+* ``radix_pass_multibit`` — one radix-2^k pass: k-bit digit extraction, the
+  multi-way matmul split and the permutation of (keys, permutation) in a
+  single launch; ``ceil(bits / k)`` of these sort a ``bits``-bit key.
+  ``pass_bits=1`` *is* the paper's binary LSB pass (a 2-bucket split).
 * ``topp_mask_sample_tiles`` — the tail of nucleus sampling fused: prefix sum
   of the sorted probabilities, the ``cum - p > threshold`` cutoff, the masked
   CDF and the inverse-transform sample, emitting only one int32 per row.
@@ -37,7 +46,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["split_tiles", "radix_pass", "topp_mask_sample_tiles"]
+__all__ = ["split_tiles", "multi_split_tiles", "radix_pass_multibit",
+           "topp_mask_sample_tiles"]
 
 
 # ---------------------------------------------------------------------------
@@ -74,6 +84,46 @@ def _splitind_body(flags_row, payload_rows, *, s: int):
     outs = tuple(jnp.zeros_like(p).at[0, dest].set(p[0]) for p in payload_rows)
     ind = jnp.zeros((1, n), jnp.int32).at[0, dest].set(iota[0])
     return outs, ind, n_true
+
+
+def _multisplit_body(digits_row, payload_rows, *, s: int, radix: int,
+                     with_ind: bool = True):
+    """Stable ``radix``-way split of one (1, n) row held in VMEM.
+
+    ``digits_row``: (1, n) int32 bucket ids in ``[0, radix)``; padding must
+    carry the maximum digit ``radix - 1`` so it lands (stably) at the tail.
+    Returns (scattered payloads, original-index permutation or ``None``,
+    per-bucket totals of shape (radix,)).
+    """
+    n = digits_row.shape[-1]
+    rows = n // s
+    d = digits_row.reshape(rows, 1, s)
+    # --- (rows, R, s) one-hot digit matrix, built in-register ---
+    bid = jax.lax.broadcasted_iota(jnp.int32, (rows, radix, s), 1)
+    oh = (d == bid).astype(jnp.int8)
+    # --- all R bucket mask scans as ONE batched A @ U_s MXU contraction ---
+    ri = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    ci = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    u = (ri <= ci).astype(jnp.int8)                    # U_s, in-register
+    local = jax.lax.dot_general(oh, u, (((2,), (0,)), ((), ())),
+                                preferred_element_type=jnp.int32)
+    sums = local[:, :, -1]                             # (rows, R) block totals
+    prefix = jnp.cumsum(sums, axis=0) - sums           # VPU carry propagation
+    inc = local + prefix[:, :, None]                   # inclusive bucket scans
+    # --- per-bucket exclusive offsets (tiny R-wide scan of bucket totals) ---
+    oh32 = oh.astype(jnp.int32)
+    ex = inc - oh32                                    # exclusive within bucket
+    totals = inc[-1, :, -1]                            # (R,) bucket counts
+    base = jnp.cumsum(totals) - totals                 # exclusive bucket bases
+    # dest_i = base[d_i] + ex[d_i, i]; the one-hot contraction keeps it on the VPU
+    dest = jnp.sum(oh32 * (ex + base[None, :, None]), axis=1).reshape(n)
+    # --- permutation (Ascend: vector-core scatter; here: in-VMEM jnp scatter) ---
+    outs = tuple(jnp.zeros_like(p).at[0, dest].set(p[0]) for p in payload_rows)
+    ind = None
+    if with_ind:
+        iota = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
+        ind = jnp.zeros((1, n), jnp.int32).at[0, dest].set(iota[0])
+    return outs, ind, totals
 
 
 # ---------------------------------------------------------------------------
@@ -133,33 +183,104 @@ def split_tiles(x: jax.Array, flags: jax.Array, *, s: int = 128,
 
 
 # ---------------------------------------------------------------------------
-# radix pass
+# multi-way split (radix-2^k SplitInd)
 # ---------------------------------------------------------------------------
 
 
-def _radix_pass_kernel(w_ref, p_ref, wo_ref, po_ref, *, shift: int, s: int):
+def _multi_split_kernel(x_ref, d_ref, z_ref, ind_ref, cnt_ref, *, s: int,
+                        radix: int):
+    (z,), ind, totals = _multisplit_body(d_ref[...], (x_ref[...],), s=s,
+                                         radix=radix)
+    z_ref[...] = z
+    ind_ref[...] = ind
+    cnt_ref[...] = totals.reshape(1, radix)
+
+
+def multi_split_tiles(x: jax.Array, digits: jax.Array, *, num_buckets: int,
+                      s: int = 128, interpret: bool | None = None):
+    """Fused stable ``num_buckets``-way split: ``(z, indices, counts)``.
+
+    ``x``: (..., n) payload; ``digits``: same shape, int bucket ids in
+    ``[0, num_buckets)``.  One launch per batch row; the row (padded to a
+    multiple of ``s`` with the maximum digit, so padding stays at the tail)
+    lives in VMEM.  ``counts`` has shape ``(..., num_buckets)``.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    *lead, n = x.shape
+    xb = x.reshape(-1, n)
+    db = digits.reshape(-1, n).astype(jnp.int32)
+    b = xb.shape[0]
+    pad = (-n) % s
+    if pad:
+        xb = jnp.pad(xb, ((0, 0), (0, pad)))
+        db = jnp.pad(db, ((0, 0), (0, pad)),
+                     constant_values=num_buckets - 1)  # pads sort to the tail
+    np_ = xb.shape[-1]
+    z, ind, cnt = pl.pallas_call(
+        functools.partial(_multi_split_kernel, s=s, radix=num_buckets),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, np_), lambda i: (i, 0)),
+            pl.BlockSpec((1, np_), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, np_), lambda i: (i, 0)),
+            pl.BlockSpec((1, np_), lambda i: (i, 0)),
+            pl.BlockSpec((1, num_buckets), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, np_), x.dtype),
+            jax.ShapeDtypeStruct((b, np_), jnp.int32),
+            jax.ShapeDtypeStruct((b, num_buckets), jnp.int32),
+        ],
+        interpret=interpret,
+        name=f"multi_split_r{num_buckets}_s{s}",
+    )(xb, db)
+    if pad:
+        cnt = cnt.at[:, -1].add(-pad)                  # padding landed in bucket R-1
+    z = z[:, :n].reshape(*lead, n)
+    ind = ind[:, :n].reshape(*lead, n)
+    cnt = cnt.reshape(*lead, num_buckets)
+    return z, ind, cnt
+
+
+# ---------------------------------------------------------------------------
+# radix pass (radix-2^k; pass_bits=1 is the paper's binary formulation)
+# ---------------------------------------------------------------------------
+
+
+def _radix_pass_multibit_kernel(w_ref, p_ref, wo_ref, po_ref, *, shift: int,
+                                pass_bits: int, s: int):
     w = w_ref[...]
-    one = jnp.asarray(1, w.dtype)
-    flags = (((w >> shift) & one) == 0).astype(jnp.int8)   # zeros-first LSB pass
-    (wo, po), _, _ = _splitind_body(flags, (w, p_ref[...]), s=s)
+    mask = jnp.asarray((1 << pass_bits) - 1, w.dtype)
+    digits = ((w >> shift) & mask).astype(jnp.int32)   # k-bit digit, ascending
+    (wo, po), _, _ = _multisplit_body(digits, (w, p_ref[...]), s=s,
+                                      radix=1 << pass_bits, with_ind=False)
     wo_ref[...] = wo
     po_ref[...] = po
 
 
-def radix_pass(work: jax.Array, perm: jax.Array, *, shift: int, s: int = 128,
-               interpret: bool | None = None):
-    """One fused LSB radix pass on pre-padded (b, n) operands.
+def radix_pass_multibit(work: jax.Array, perm: jax.Array, *, shift: int,
+                        pass_bits: int, s: int = 128,
+                        interpret: bool | None = None):
+    """One fused radix-2^k pass on pre-padded (b, n) operands.
 
     ``work`` must be an unsigned encoding padded at the tail with the maximum
     key value, so padding sorts (stably) to the end and stays there across
-    passes.  Digit extraction, the int8 matmul mask scan and the permutation of
-    both arrays happen in one launch.
+    passes.  One launch retires ``pass_bits`` bits: the k-bit digit
+    extraction, the ``2^k``-way matmul split and the permutation of both
+    arrays are chained in a single launch, so ``ceil(bits / k)`` launches
+    sort the full key — a ``k``-fold cut in HBM round-trips of the (keys,
+    permutation) arrays.  ``pass_bits=1`` is exactly the paper's binary LSB
+    pass (zeros-first split on one bit).
     """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     b, n = work.shape
     return pl.pallas_call(
-        functools.partial(_radix_pass_kernel, shift=shift, s=s),
+        functools.partial(_radix_pass_multibit_kernel, shift=shift,
+                          pass_bits=pass_bits, s=s),
         grid=(b,),
         in_specs=[
             pl.BlockSpec((1, n), lambda i: (i, 0)),
@@ -174,7 +295,7 @@ def radix_pass(work: jax.Array, perm: jax.Array, *, shift: int, s: int = 128,
             jax.ShapeDtypeStruct((b, n), jnp.int32),
         ],
         interpret=interpret,
-        name=f"radix_pass_b{shift}_s{s}",
+        name=f"radix_pass_multibit_sh{shift}_k{pass_bits}_s{s}",
     )(work, perm)
 
 

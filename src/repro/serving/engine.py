@@ -18,10 +18,13 @@ class ServeEngine:
 
     def __init__(self, cfg, params, *, mesh=None, max_len: int = 512,
                  top_p: float = 0.9, temperature: float = 1.0,
-                 sampler: str = "topp_scan"):
+                 sampler: str = "topp_scan", bits_per_pass: int = 4):
         if sampler not in self.SAMPLERS:
             raise ValueError(
                 f"unknown sampler {sampler!r}; expected one of {self.SAMPLERS}")
+        if not 1 <= bits_per_pass <= 8:  # eager: fail at construction, not in jit
+            raise ValueError(
+                f"bits_per_pass must be in [1, 8], got {bits_per_pass}")
         self.cfg = cfg
         self.params = params
         self.mesh = mesh
@@ -29,6 +32,9 @@ class ServeEngine:
         self.top_p = top_p
         self.temperature = temperature
         self.sampler = sampler
+        # radix-2^k width of the sampler's sort passes: 4 -> the decode-path
+        # bf16 key sort runs 4 radix-16 passes instead of 16 binary splits.
+        self.bits_per_pass = bits_per_pass
         self.model = build_model(cfg)
         self._prefill = jax.jit(self._prefill_impl)
         self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
@@ -45,7 +51,8 @@ class ServeEngine:
         sort_method = "xla" if self.sampler == "topp_xla" else "radix"
         return top_p_sample(logits, key, p=self.top_p,
                             temperature=self.temperature, method=method,
-                            sort_method=sort_method).astype(jnp.int32)
+                            sort_method=sort_method,
+                            bits_per_pass=self.bits_per_pass).astype(jnp.int32)
 
     def _prefill_impl(self, params, batch, key):
         with use_mesh(self.mesh):

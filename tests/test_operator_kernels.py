@@ -68,10 +68,13 @@ def test_compress_parity():
 
 @pytest.mark.parametrize("dtype", ["float32", "bfloat16", "int8"])
 @pytest.mark.parametrize("n", [37, 333])
-def test_radix_sort_parity(dtype, n):
+@pytest.mark.parametrize("bits_per_pass", [1, 4])
+def test_radix_sort_parity(dtype, n, bits_per_pass):
     x = _payload(dtype, n, 7 * n)
-    vv, iv = radix_sort(x, method="vector", tile_s=S)
-    vk, ik = radix_sort(x, method="kernel", tile_s=S)
+    vv, iv = radix_sort(x, method="vector", tile_s=S,
+                        bits_per_pass=bits_per_pass)
+    vk, ik = radix_sort(x, method="kernel", tile_s=S,
+                        bits_per_pass=bits_per_pass)
     np.testing.assert_array_equal(np.asarray(vv), np.asarray(vk))
     np.testing.assert_array_equal(np.asarray(iv), np.asarray(ik))
 
