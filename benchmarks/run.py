@@ -21,6 +21,9 @@ the TPU-side projection lives in EXPERIMENTS.md §Roofline).
                  pass-count and bytes-moved columns (plus a trace-only guard
                  that the fused sort runs ceil(bits/k) passes)
                  -> BENCH_sort.json
+  segscan        segmented scan: segment-count × mean-segment-length × method
+                 on ragged packed batches, vs the dense-pad baseline
+                 -> BENCH_segscan.json
 """
 from __future__ import annotations
 
@@ -354,6 +357,45 @@ def sort_sweep(lens):
 
 
 # ---------------------------------------------------------------------------
+# segscan: segmented scan over ragged packed batches (ISSUE 4 tentpole)
+# ---------------------------------------------------------------------------
+
+
+def segscan_sweep(smoke=False):
+    """Segmented scan: segment-count × mean-segment-length × method sweep.
+
+    Ragged offsets are drawn deterministically (uniform cuts, so empty and
+    tiny segments occur); every method scans the same fp32 packed batch and
+    the derived column reports throughput plus ``pad_waste`` — the fraction of
+    extra elements a dense ``(segments, max_len)`` padding of the same batch
+    would read/write, i.e. the traffic the packed layout avoids.
+    """
+    from repro.core.segmented import segment_scan
+    methods = ("vector", "matmul", "kernel", "blocked")
+    s = 16 if smoke else 128
+    grid = ((4, 128), (16, 256)) if smoke else \
+        ((8, 512), (64, 1024), (512, 2048))
+    for num_segs, mean_len in grid:
+        n = num_segs * mean_len
+        rng = np.random.default_rng(7)
+        cuts = np.sort(rng.integers(0, n + 1, num_segs - 1))
+        offsets = jnp.asarray(np.concatenate([[0], cuts, [n]]), jnp.int32)
+        lens = np.diff(np.asarray(offsets))
+        pad_waste = (num_segs * int(lens.max()) - n) / n
+        x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+        base = None
+        for m in methods:
+            fn = jax.jit(lambda v, o, m=m: segment_scan(v, o, method=m,
+                                                        tile_s=s))
+            t = timeit(fn, x, offsets, repeats=3, warmup=1)
+            base = base or t
+            row(f"segscan/{m}/S={num_segs}/L={mean_len}", t,
+                f"n={n};GB/s={8 * n / t / 1e9:.2f};"
+                f"pad_waste={pad_waste:.2f};"
+                f"speedup_vs_vector={base / t:.2f}x")
+
+
+# ---------------------------------------------------------------------------
 # Operator benchmarks: split / sort / top-p across methods and dtypes
 # (tracks the fused-kernel trajectory, not just raw scan — ISSUE 1 tentpole)
 # ---------------------------------------------------------------------------
@@ -440,12 +482,14 @@ def main() -> None:
         "fig13": lambda: fig13_top_p(quick=not args.full),
         "scan_pipeline": lambda: scan_pipeline_sweep(lens, smoke=args.smoke),
         "sort": lambda: sort_sweep([512] if args.smoke else lens[:2]),
+        "segscan": lambda: segscan_sweep(smoke=args.smoke),
         "ops": lambda: ops_operators(smoke=args.smoke),
     }
     only = set(args.only.split(",")) if args.only else None
     if args.smoke and only is None:
         # fast, single-process sections (sort carries the pass-count guard)
-        only = {"fig3", "fig10", "fig11", "scan_pipeline", "sort", "ops"}
+        only = {"fig3", "fig10", "fig11", "scan_pipeline", "sort", "segscan",
+                "ops"}
     print("name,us_per_call,derived")
     for name, fn in sections.items():
         if only and name not in only:

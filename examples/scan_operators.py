@@ -45,3 +45,23 @@ print("split([0..9], %3==0):", np.asarray(z).astype(int), "n_true =", int(nt))
 zk, indk, ntk = split(x, x % 3 == 0, method="kernel")
 assert np.array_equal(np.asarray(z), np.asarray(zk))
 print("split(method='kernel') matches — mask scan + scatter fused in VMEM")
+
+# --- segmented subsystem: the same operators over a packed ragged batch ---
+from repro.core import (SegmentedBatch, segment_cumsum, segment_sort,
+                        segment_topk, segment_top_p_sample)
+
+docs = [rng.standard_normal(n).astype(np.float32) for n in (5, 0, 3, 9)]
+sb = SegmentedBatch.from_ragged(docs)
+print("packed batch:", sb.num_segments, "segments, lengths",
+      np.asarray(sb.lengths))
+print("per-segment cumsum (carry resets at boundaries):",
+      np.asarray(segment_cumsum(sb)).round(2))
+sv, sperm = segment_sort(sb, bits_per_pass=4)       # radix sort per segment
+print("segment_sort head:", np.asarray(sv[:5]).round(2))
+tv, ti, tc = segment_topk(sb, k=2)
+print("per-segment top-2:", np.asarray(tv).round(2), "counts", np.asarray(tc))
+
+# ragged nucleus sampling: one launch, no padding to the longest row
+tok = segment_top_p_sample(sb.values * 3, sb.offsets, jax.random.PRNGKey(1),
+                           p=0.9)
+print("segment_top_p_sample tokens (segment-local):", np.asarray(tok))

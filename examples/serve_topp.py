@@ -26,8 +26,8 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     batch = synth_batch(cfg, ShapeConfig("serve", args.prompt_len, args.batch,
                                          "prefill"), jax.random.PRNGKey(1))
-    for sampler in ("topp_scan", "topp_kernel", "topp_blocked", "topp_xla",
-                    "greedy"):
+    for sampler in ("topp_scan", "topp_kernel", "topp_blocked",
+                    "topp_segmented", "topp_xla", "greedy"):
         eng = ServeEngine(cfg, params, max_len=args.prompt_len +
                           args.new_tokens + cfg.n_img_tokens,
                           top_p=0.9, sampler=sampler)

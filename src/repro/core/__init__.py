@@ -8,4 +8,9 @@ from repro.core.primitives import (
     split, multi_split, compress, radix_sort, sort, topk, top_p_sample,
     weighted_sample,
 )
+from repro.core.segmented import (
+    SegmentedBatch, boundary_flags, segment_ids, segment_scan, segment_cumsum,
+    segment_sums, segment_softmax, segment_compress, segment_sort,
+    segment_topk, segment_top_p_sample,
+)
 from repro.core.ssd import ssd_scan, ssd_scan_ref, mlstm_chunked, mlstm_ref

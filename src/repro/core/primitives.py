@@ -609,8 +609,8 @@ def topk(x: jax.Array, k: int, *, method: str = "matmul", tile_s: int = 128,
 
 
 def weighted_sample(w: jax.Array, key: jax.Array, *, method: str = "matmul",
-                    cdf: Optional[jax.Array] = None,
-                    tile_s: int = 128) -> jax.Array:
+                    cdf: Optional[jax.Array] = None, tile_s: int = 128,
+                    u: Optional[jax.Array] = None) -> jax.Array:
     """Inverse-transform sampling on the scanned CDF (paper §5).
 
     The paper invokes SplitInd with predicate ``scan(w) > θ·Σw`` and reads the
@@ -619,10 +619,13 @@ def weighted_sample(w: jax.Array, key: jax.Array, *, method: str = "matmul",
 
     Args:
         w: Non-negative weights ``(..., n)`` (need not be normalized).
-        key: JAX PRNG key.
+        key: JAX PRNG key (unused when ``u`` is given).
         method: Scan method for the CDF, one of ``METHODS``.
         cdf: Optional precomputed inclusive scan of ``w`` (skips the scan).
         tile_s: Tile side ``s`` for the matmul scans.
+        u: Optional pre-drawn uniforms of shape ``w.shape[:-1] + (1,)``
+            overriding the ``key`` draw — deterministic replay and the
+            segmented sampler's per-segment parity tests use this.
 
     Returns:
         Sampled indices, shape ``w.shape[:-1]``, int32, in ``[0, n)``.
@@ -631,36 +634,44 @@ def weighted_sample(w: jax.Array, key: jax.Array, *, method: str = "matmul",
         >>> import jax, jax.numpy as jnp
         >>> int(weighted_sample(jnp.asarray([0.0, 0.0, 1.0]), jax.random.PRNGKey(0)))
         2
+        >>> int(weighted_sample(jnp.asarray([1.0, 1.0]), None,
+        ...                     u=jnp.asarray([0.75])))
+        1
     """
     if cdf is None:
         cdf = scan(w, axis=-1, method=method, tile_s=tile_s)
     total = cdf[..., -1:]
-    theta = jax.random.uniform(key, w.shape[:-1] + (1,), dtype=cdf.dtype) * total
+    if u is None:
+        u = jax.random.uniform(key, w.shape[:-1] + (1,), dtype=cdf.dtype)
+    theta = u.astype(cdf.dtype) * total
     idx = jnp.sum((cdf < theta).astype(jnp.int32), axis=-1)
     return jnp.clip(idx, 0, w.shape[-1] - 1)
 
 
 @_register("top_p_tail", "matmul", "vector", "blocked")
-def _top_p_tail_unfused(sorted_p, key, *, p, method, tile_s, interpret):
+def _top_p_tail_unfused(sorted_p, key, *, p, method, tile_s, interpret, u=None):
     """Cumsum -> cutoff -> masked renormalised CDF -> inverse-transform sample."""
     cum = scan(sorted_p, axis=-1, method=method, tile_s=tile_s)
     cut = (cum - sorted_p) > p                    # llama3's sample_top_p formula
     masked = jnp.where(cut, 0.0, sorted_p)
-    return weighted_sample(masked, key, method=method, tile_s=tile_s)
+    return weighted_sample(masked, key, method=method, tile_s=tile_s, u=u)
 
 
 @_register("top_p_tail", "kernel")
-def _top_p_tail_fused(sorted_p, key, *, p, method, tile_s, interpret):
+def _top_p_tail_fused(sorted_p, key, *, p, method, tile_s, interpret, u=None):
     """The whole nucleus-sampling tail as one Pallas launch."""
     from repro.kernels import ops as _kops
-    u = jax.random.uniform(key, sorted_p.shape[:-1] + (1,), dtype=jnp.float32)
-    return _kops.topp_mask_sample_kernel(sorted_p, u, p=p, interpret=interpret)
+    if u is None:
+        u = jax.random.uniform(key, sorted_p.shape[:-1] + (1,),
+                               dtype=jnp.float32)
+    return _kops.topp_mask_sample_kernel(sorted_p, u.astype(jnp.float32), p=p,
+                                         interpret=interpret)
 
 
 def top_p_sample(logits: jax.Array, key: jax.Array, p: float = 0.9,
                  temperature: float = 1.0, *, method: str = "matmul",
                  sort_method: str = "radix", tile_s: int = 128,
-                 bits_per_pass: int = 4,
+                 bits_per_pass: int = 4, u: Optional[jax.Array] = None,
                  interpret: Optional[bool] = None) -> jax.Array:
     """Nucleus sampling exactly as in the paper's Llama3 case study (§5, §6.5).
 
@@ -685,6 +696,9 @@ def top_p_sample(logits: jax.Array, key: jax.Array, p: float = 0.9,
         tile_s: Tile side ``s`` for the mask scans.
         bits_per_pass: Bits retired per radix pass (see :func:`radix_sort`);
             ignored for ``sort_method="xla"``.
+        u: Optional pre-drawn uniforms of shape ``logits.shape[:-1] + (1,)``
+            overriding the ``key`` draw in the sampling tail (deterministic
+            replay; the segmented sampler's parity tests use this).
         interpret: Force Pallas interpret mode.
 
     Returns:
@@ -710,5 +724,6 @@ def top_p_sample(logits: jax.Array, key: jax.Array, p: float = 0.9,
         order = jnp.argsort(-probs, axis=-1)
     sorted_p = _take_along_last(probs, order)
     j = dispatch("top_p_tail", method)(
-        sorted_p, key, p=p, method=method, tile_s=tile_s, interpret=interpret)
+        sorted_p, key, p=p, method=method, tile_s=tile_s, interpret=interpret,
+        u=u)
     return _take_along_last(order, j[..., None])[..., 0]

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 
 from repro.kernels.scan_mm import scan_tiles
 from repro.kernels.scan_pipeline import blocked_scan
+from repro.kernels.segscan_mm import seg_blocked_scan, seg_scan_tiles
 from repro.kernels.split_mm import (
     multi_split_tiles,
     radix_pass_multibit,
@@ -18,7 +19,8 @@ from repro.kernels.ssd_chunk import ssd_chunk_scan
 
 __all__ = ["scan_kernel", "blocked_scan_kernel", "ssd_kernel", "split_kernel",
            "multi_split_kernel", "radix_sort_enc_kernel",
-           "topp_mask_sample_kernel"]
+           "topp_mask_sample_kernel", "seg_scan_kernel",
+           "seg_blocked_scan_kernel"]
 
 
 @functools.partial(jax.jit, static_argnames=("s", "variant", "accum_dtype", "interpret"))
@@ -37,6 +39,25 @@ def blocked_scan_kernel(x: jax.Array, *, s: int = 128, block_tiles: int = 8,
     """Three-phase blocked scan pipeline (paper §4 MCScan, one device)."""
     return blocked_scan(x, s=s, block_tiles=block_tiles, variant=variant,
                         accum_dtype=accum_dtype, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("s", "accum_dtype", "interpret"))
+def seg_scan_kernel(x: jax.Array, flags: jax.Array, *, s: int = 128,
+                    accum_dtype=None,
+                    interpret: bool | None = None) -> jax.Array:
+    """Fused segmented matmul scan: carry resets at flagged boundaries."""
+    return seg_scan_tiles(x, flags, s=s, accum_dtype=accum_dtype,
+                          interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("s", "block_tiles",
+                                             "accum_dtype", "interpret"))
+def seg_blocked_scan_kernel(x: jax.Array, flags: jax.Array, *, s: int = 128,
+                            block_tiles: int = 8, accum_dtype=None,
+                            interpret: bool | None = None) -> jax.Array:
+    """§4 blocked pipeline with a segmented phase-2 carry scan."""
+    return seg_blocked_scan(x, flags, s=s, block_tiles=block_tiles,
+                            accum_dtype=accum_dtype, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

@@ -128,6 +128,39 @@ def moe_apply_ep(p, xt, cfg, probs, gate_vals, expert_idx, *, mesh, dpa,
     return fn(xt, gate_vals, expert_idx, wg, wu, wd)
 
 
+def _dispatch_positions(eidx, n_experts, *, scan_method, mode):
+    """Position-in-expert for every (group, assignment) — the paper's mask scan.
+
+    ``eidx``: (G, Tg*K) int32 expert ids.  Two equivalent formulations:
+
+    * ``"grouped"`` — the hand-rolled reshape bookkeeping: build the
+      (G, Tg*K, E) one-hot and run a *batched* exclusive int8 mask scan per
+      group along axis 1.
+    * ``"segmented"`` — the packed-batch formulation: flatten every
+      assignment into ONE (E, G*Tg*K) one-hot stream and run a single
+      exclusive *segmented* scan with the group boundaries as CSR offsets
+      (``repro.core.segmented.segment_scan``).  Offsets are exact int8→int32
+      mask scans either way, so both modes are bit-identical; the segmented
+      form is what generalizes to ragged groups.
+
+    Returns (G, Tg*K) int32 positions.
+    """
+    g, tgk = eidx.shape
+    if mode == "grouped":
+        onehot8 = (eidx[..., None] ==
+                   jnp.arange(n_experts)[None, None, :]).astype(jnp.int8)
+        pos_all = mm_scan(onehot8, axis=1, exclusive=True, method=scan_method)
+        return jnp.take_along_axis(pos_all, eidx[..., None], axis=2)[..., 0]
+    from repro.core.segmented import segment_scan
+    flat = eidx.reshape(g * tgk)
+    oh8 = (flat[None, :] ==
+           jnp.arange(n_experts)[:, None]).astype(jnp.int8)       # (E, G*Tg*K)
+    offsets = jnp.arange(g + 1, dtype=jnp.int32) * tgk
+    pos_all = segment_scan(oh8, offsets, exclusive=True, method=scan_method)
+    pos = jnp.take_along_axis(pos_all, flat[None, :], axis=0)[0]
+    return pos.reshape(g, tgk)
+
+
 def _dp_groups(t: int) -> int:
     """Number of data-parallel dispatch groups (aligned to the dp sharding)."""
     from repro.utils.sharding import current_mesh, dp_axes
@@ -140,7 +173,8 @@ def _dp_groups(t: int) -> int:
     return g if (g > 1 and t % g == 0) else 1
 
 
-def moe_apply(p, x, cfg, *, scan_method=None, no_drop=False):
+def moe_apply(p, x, cfg, *, scan_method=None, no_drop=False,
+              dispatch_mode="auto"):
     """x: (B,S,D) -> (B,S,D).  GROUP-LOCAL capacity dispatch with scan offsets.
 
     Distribution (EXPERIMENTS.md §Perf cell C): tokens are viewed as
@@ -150,6 +184,13 @@ def moe_apply(p, x, cfg, *, scan_method=None, no_drop=False):
     reshard of the dispatched buffers — one all-to-all each way.  The naive
     global-scatter formulation made GSPMD all-gather a u32[T·K·E, D] scatter-index
     tensor: 2.6 TB/chip wire on deepseek-moe train_4k.
+
+    ``dispatch_mode`` selects how the position-in-expert offsets are computed
+    (see ``_dispatch_positions``): ``"segmented"`` runs one packed segmented
+    scan with group boundaries as CSR offsets, ``"grouped"`` the original
+    batched reshape formulation, and ``"auto"`` picks segmented on a single
+    dispatch group (no dp sharding to respect) and grouped otherwise.  The
+    two are bit-identical.
 
     ``no_drop=True`` (decode) sizes capacity so no token can overflow.
     """
@@ -185,10 +226,11 @@ def moe_apply(p, x, cfg, *, scan_method=None, no_drop=False):
 
     # ---- the paper's int8 mask scan, per group (dp-local) ----
     eidx = expert_idx.reshape(g, tg * m.top_k)                          # (G, Tg*K)
-    onehot8 = (eidx[..., None] ==
-               jnp.arange(m.n_experts)[None, None, :]).astype(jnp.int8)
-    pos_all = mm_scan(onehot8, axis=1, exclusive=True, method=scan_method)
-    position = jnp.take_along_axis(pos_all, eidx[..., None], axis=2)[..., 0]
+    if dispatch_mode == "auto":
+        dispatch_mode = "segmented" if g == 1 else "grouped"
+    position = _dispatch_positions(eidx, m.n_experts,
+                                   scan_method=scan_method,
+                                   mode=dispatch_mode)
     keep = position < capacity                                          # (G, Tg*K)
     sentinel = m.n_experts * capacity
     dest = jnp.where(keep, eidx * capacity + position, sentinel)

@@ -1,6 +1,10 @@
 """Serving engine: batched prefill + decode with KV caches and the paper's
 scan-based top-p (nucleus) sampler wired into the decode step (paper §5/§6.5 —
-radix sort + prefix sum + inverse-transform sample, all on the matmul scan)."""
+radix sort + prefix sum + inverse-transform sample, all on the matmul scan).
+``sampler="topp_segmented"`` routes the same operator through the segmented
+subsystem: the batch's logit rows become segments of one packed array, so a
+ragged decode batch (rows of different active vocab slices, via
+``sample_packed``) top-p samples in one launch without padding."""
 from __future__ import annotations
 
 from typing import Dict
@@ -9,12 +13,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.primitives import top_p_sample
+from repro.core.segmented import SegmentedBatch, segment_top_p_sample
 from repro.models.model import build_model
 from repro.utils.sharding import use_mesh
 
 
 class ServeEngine:
-    SAMPLERS = ("greedy", "topp_scan", "topp_kernel", "topp_blocked", "topp_xla")
+    SAMPLERS = ("greedy", "topp_scan", "topp_kernel", "topp_blocked",
+                "topp_segmented", "topp_xla")
 
     def __init__(self, cfg, params, *, mesh=None, max_len: int = 512,
                  top_p: float = 0.9, temperature: float = 1.0,
@@ -43,9 +49,18 @@ class ServeEngine:
     def _sample(self, logits, key):
         """samplers: greedy | topp_scan (matmul scans) | topp_kernel (fused
         Pallas radix passes + one-launch sampling tail) | topp_blocked (scans
-        on the §4 blocked pipeline) | topp_xla (baseline)."""
+        on the §4 blocked pipeline) | topp_segmented (rows packed as segments
+        of one array, sampled by the segmented subsystem) | topp_xla
+        (baseline)."""
         if self.sampler == "greedy":
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if self.sampler == "topp_segmented":
+            b, v = logits.shape
+            offsets = jnp.arange(b + 1, dtype=jnp.int32) * v
+            return segment_top_p_sample(
+                logits.reshape(b * v), offsets, key, p=self.top_p,
+                temperature=self.temperature,
+                bits_per_pass=self.bits_per_pass).astype(jnp.int32)
         method = {"topp_kernel": "kernel", "topp_blocked": "blocked"}.get(
             self.sampler, "matmul")
         sort_method = "xla" if self.sampler == "topp_xla" else "radix"
@@ -53,6 +68,20 @@ class ServeEngine:
                             temperature=self.temperature, method=method,
                             sort_method=sort_method,
                             bits_per_pass=self.bits_per_pass).astype(jnp.int32)
+
+    def sample_packed(self, packed: SegmentedBatch, key) -> jnp.ndarray:
+        """Top-p sample every segment of a packed ragged logits batch at once.
+
+        ``packed``: a :class:`~repro.core.segmented.SegmentedBatch` whose
+        segments are per-request logit slices (rows may have different
+        lengths — e.g. per-request vocabulary masks in continuous batching).
+        Returns one int32 segment-local token id per segment, in one launch;
+        no padding to the longest row is performed.
+        """
+        return segment_top_p_sample(
+            packed.values, packed.offsets, key, p=self.top_p,
+            temperature=self.temperature,
+            bits_per_pass=self.bits_per_pass).astype(jnp.int32)
 
     def _prefill_impl(self, params, batch, key):
         with use_mesh(self.mesh):

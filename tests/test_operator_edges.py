@@ -1,0 +1,166 @@
+"""Edge-case coverage for ``weighted_sample`` and ``compress`` (ISSUE 4).
+
+Empty masks, all-true masks, single-element inputs and non-fp32 dtypes, plus
+the deterministic ``u=`` override threaded through the sampling tail —
+hypothesis-guarded in the ``test_multisplit.py`` style.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+try:  # property tests skip (not error) in minimal environments
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+from repro.core import compress, top_p_sample, weighted_sample
+
+S = 8
+METHODS_ALL = ["vector", "matmul", "kernel", "blocked"]
+
+
+# ---------------------------------------------------------------------------
+# compress edges
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", METHODS_ALL)
+def test_compress_empty_mask(method):
+    x = jnp.asarray([3, 1, 4, 1, 5], jnp.int32)
+    z, c = compress(x, jnp.zeros(5, bool), method=method, tile_s=S,
+                    fill_value=-9)
+    assert int(c) == 0
+    np.testing.assert_array_equal(np.asarray(z), [-9] * 5)
+
+
+@pytest.mark.parametrize("method", METHODS_ALL)
+def test_compress_all_true_mask(method):
+    x = jnp.asarray([3, 1, 4, 1, 5], jnp.int32)
+    z, c = compress(x, jnp.ones(5, bool), method=method, tile_s=S)
+    assert int(c) == 5
+    np.testing.assert_array_equal(np.asarray(z), np.asarray(x))
+
+
+@pytest.mark.parametrize("method", ["vector", "kernel"])
+@pytest.mark.parametrize("keep", [True, False])
+def test_compress_single_element(method, keep):
+    x = jnp.asarray([7], jnp.int32)
+    z, c = compress(x, jnp.asarray([keep]), method=method, tile_s=S)
+    assert int(c) == int(keep)
+    assert np.asarray(z).tolist() == ([7] if keep else [0])
+
+
+@pytest.mark.parametrize("dtype", [jnp.int8, jnp.int32, jnp.bfloat16,
+                                   jnp.float16])
+@pytest.mark.parametrize("method", ["vector", "matmul", "kernel"])
+def test_compress_non_fp32_dtypes(dtype, method):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(-8, 9, 37), dtype)
+    m = jnp.asarray(rng.random(37) < 0.5)
+    z, c = compress(x, m, method=method, tile_s=S)
+    assert z.dtype == dtype
+    want = np.asarray(x.astype(jnp.float32))[np.asarray(m)]
+    np.testing.assert_array_equal(
+        np.asarray(z.astype(jnp.float32))[:int(c)], want)
+    assert np.all(np.asarray(z.astype(jnp.float32))[int(c):] == 0)
+
+
+# ---------------------------------------------------------------------------
+# weighted_sample edges
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", METHODS_ALL)
+def test_weighted_sample_single_element(method):
+    idx = weighted_sample(jnp.asarray([3.0]), jax.random.PRNGKey(0),
+                          method=method, tile_s=S)
+    assert int(idx) == 0 and idx.dtype == jnp.int32
+
+
+@pytest.mark.parametrize("method", ["vector", "matmul"])
+def test_weighted_sample_point_mass(method):
+    """All mass on one index: every draw must return it."""
+    w = jnp.zeros(17).at[11].set(2.5)
+    for seed in range(4):
+        assert int(weighted_sample(w, jax.random.PRNGKey(seed),
+                                   method=method, tile_s=S)) == 11
+
+
+def test_weighted_sample_all_zero_weights_clips_in_range():
+    """Degenerate all-zero weights still return a valid index."""
+    idx = weighted_sample(jnp.zeros(9), jax.random.PRNGKey(1), tile_s=S)
+    assert 0 <= int(idx) < 9
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float16])
+def test_weighted_sample_non_fp32_dtypes(dtype):
+    """Sub-fp32 weights: the CDF accumulates in fp32 (accum dtype rules)."""
+    w = jnp.asarray([0.0, 0.0, 1.0, 0.0], dtype)
+    for method in ("vector", "matmul"):
+        assert int(weighted_sample(w, jax.random.PRNGKey(2), method=method,
+                                   tile_s=S)) == 2
+
+
+def test_weighted_sample_u_override_and_cdf():
+    """``u=`` replaces the key draw; ``cdf=`` skips the scan — same index."""
+    w = jnp.asarray([1.0, 1.0, 1.0, 1.0])
+    u = jnp.asarray([0.60])
+    i1 = weighted_sample(w, None, u=u, tile_s=S)
+    i2 = weighted_sample(w, None, u=u, tile_s=S,
+                         cdf=jnp.cumsum(w))
+    assert int(i1) == int(i2) == 2
+    # batched: one uniform per row
+    wb = jnp.stack([w, w])
+    ub = jnp.asarray([[0.1], [0.9]])
+    np.testing.assert_array_equal(
+        np.asarray(weighted_sample(wb, None, u=ub, tile_s=S)), [0, 3])
+
+
+def test_top_p_sample_u_override_is_deterministic():
+    logits = jnp.asarray(
+        np.random.default_rng(3).standard_normal((2, 64)) * 2, jnp.float32)
+    u = jnp.asarray([[0.3], [0.7]])
+    ref = top_p_sample(logits, None, p=0.9, u=u, tile_s=S)
+    for method in ("vector", "matmul", "blocked"):
+        got = top_p_sample(logits, None, p=0.9, method=method, u=u, tile_s=S)
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+# ---------------------------------------------------------------------------
+# property-based (hypothesis)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.booleans(), min_size=1, max_size=80),
+           st.sampled_from(["vector", "matmul", "kernel"]))
+    def test_compress_property(mask, method):
+        m = np.asarray(mask)
+        x = np.arange(m.size, dtype=np.int32)
+        z, c = compress(jnp.asarray(x), jnp.asarray(m), method=method,
+                        tile_s=S)
+        assert int(c) == int(m.sum())
+        np.testing.assert_array_equal(np.asarray(z)[:int(c)], x[m])
+        assert np.all(np.asarray(z)[int(c):] == 0)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 10**6), st.integers(1, 50))
+    def test_weighted_sample_property_in_support(seed, n):
+        """Sampled index always lands on a nonzero-weight position."""
+        rng = np.random.default_rng(seed)
+        w = rng.random(n) * (rng.random(n) < 0.5)
+        if w.sum() == 0:
+            w[rng.integers(0, n)] = 1.0
+        idx = int(weighted_sample(jnp.asarray(w, jnp.float32),
+                                  jax.random.PRNGKey(seed), tile_s=S))
+        assert 0 <= idx < n
+        assert w[idx] > 0
+
+else:  # pragma: no cover
+
+    @pytest.mark.skip(reason="hypothesis not installed — property tests skipped")
+    def test_operator_edges_property_placeholder():
+        pass  # visible placeholder so missing hypothesis shows as a skip

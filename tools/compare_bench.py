@@ -1,0 +1,145 @@
+"""Compare fresh ``BENCH_*.json`` files against the committed baselines.
+
+The bench-smoke CI job runs ``benchmarks/run.py --smoke --json-out bench-out``
+and then this script, so the baselines under ``benchmarks/baseline/`` actually
+gate regressions instead of only being uploaded as an artifact:
+
+* **structure** — every baseline file must have a fresh counterpart, and every
+  baseline row name must appear in the fresh file (a vanished section or row
+  fails the job; *new* rows/files are reported but allowed — the suite grows).
+* **exact derived metrics** — integer model quantities embedded in the
+  ``derived`` column (``passes``, ``expected``, ``bits``, ``bytes_moved``,
+  ``n``, ``scans_per_batch``) must match exactly: they encode algorithmic
+  facts (launch counts, traffic models), not timings.
+* **timings** — ``us_per_call`` is compared *after normalizing out machine
+  speed*: the median of ``fresh/baseline`` ratios across **all** files is
+  taken as the machine-speed scale, and each row's normalized ratio must stay
+  below ``1 + rtol``.  An operator or a whole section regressing relative to
+  the rest of the suite fails even on a slower/faster runner; a uniformly
+  slower machine does not.  (The scale is global, not per file, so a change
+  that slows every row of one section — or one row of a two-row section —
+  cannot hide inside its own normalization.)
+
+Usage::
+
+    python tools/compare_bench.py bench-out benchmarks/baseline [--rtol RTOL]
+
+Exit status is non-zero on any failure (this is what fails CI).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import statistics
+import sys
+
+EXACT_KEYS = ("passes", "expected", "bits", "bytes_moved", "n",
+              "scans_per_batch")
+
+
+def _load(path: str) -> dict:
+    """Load one BENCH file as ``{row name: row dict}``."""
+    with open(path) as fh:
+        return {r["name"]: r for r in json.load(fh)}
+
+
+def _derived_map(derived: str) -> dict:
+    """Parse the ``;``-separated ``key=value`` derived column."""
+    out = {}
+    for part in derived.split(";"):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            out[k] = v
+    return out
+
+
+def compare_file(name: str, fresh: dict, base: dict) -> "tuple[list, dict]":
+    """Compare one section's structure and exact derived metrics.
+
+    Returns ``(failures, timing ratios)`` — the timing check itself runs in
+    :func:`main` against the suite-wide machine-speed scale.
+    """
+    fails = []
+    missing = sorted(set(base) - set(fresh))
+    for m in missing:
+        fails.append(f"{name}: row {m!r} present in baseline but missing")
+    new = sorted(set(fresh) - set(base))
+    if new:
+        print(f"  note: {name} has {len(new)} new row(s) (allowed)")
+    shared = sorted(set(base) & set(fresh))
+    # exact derived metrics
+    for r in shared:
+        bd = _derived_map(base[r].get("derived", ""))
+        fd = _derived_map(fresh[r].get("derived", ""))
+        for k in EXACT_KEYS:
+            if k in bd and k in fd and bd[k] != fd[k]:
+                fails.append(
+                    f"{name}: {r}: derived {k}={fd[k]} != baseline {bd[k]}")
+    ratios = {}
+    for r in shared:
+        bt, ft = base[r]["us_per_call"], fresh[r]["us_per_call"]
+        if bt > 0 and ft > 0:
+            ratios[f"{name}: {r}"] = ft / bt
+    return fails, ratios
+
+
+def main() -> int:
+    """CLI entry point; returns the process exit status."""
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("fresh_dir", help="directory with freshly written BENCH_*.json")
+    ap.add_argument("baseline_dir", help="directory with committed baselines")
+    ap.add_argument("--rtol", type=float, default=6.0,
+                    help="allowed normalized slowdown per row (default 6.0 = "
+                         "7x; smoke rows are µs-scale and dispatch-noise "
+                         "dominated, so the timing gate is a coarse backstop "
+                         "— the exact derived metrics are the sharp one)")
+    args = ap.parse_args()
+
+    base_files = sorted(glob.glob(os.path.join(args.baseline_dir, "BENCH_*.json")))
+    if not base_files:
+        print(f"no baselines under {args.baseline_dir}", file=sys.stderr)
+        return 2
+    fails = []
+    all_ratios = {}
+    for bf in base_files:
+        fname = os.path.basename(bf)
+        ff = os.path.join(args.fresh_dir, fname)
+        print(f"comparing {fname}")
+        if not os.path.exists(ff):
+            fails.append(f"{fname}: baseline exists but no fresh file was produced")
+            continue
+        file_fails, ratios = compare_file(fname, _load(ff), _load(bf))
+        fails.extend(file_fails)
+        all_ratios.update(ratios)
+    # timings, normalized by the suite-wide median ratio (machine speed) so a
+    # section-wide slowdown cannot hide inside its own file's normalization
+    if all_ratios:
+        scale = statistics.median(all_ratios.values())
+        print(f"machine-speed scale (suite-wide median fresh/baseline): "
+              f"{scale:.2f}x over {len(all_ratios)} rows")
+        for r, ratio in sorted(all_ratios.items()):
+            norm = ratio / scale
+            if norm > 1 + args.rtol:
+                fails.append(
+                    f"{r}: {norm:.2f}x slower than the suite vs baseline "
+                    f"(raw {ratio:.2f}x, machine scale {scale:.2f}x, "
+                    f"rtol {args.rtol})")
+    fresh_only = sorted(
+        set(os.path.basename(p)
+            for p in glob.glob(os.path.join(args.fresh_dir, "BENCH_*.json"))) -
+        set(os.path.basename(p) for p in base_files))
+    for f in fresh_only:
+        print(f"  note: {f} has no baseline yet (allowed; commit one to gate it)")
+    if fails:
+        print(f"\nFAIL: {len(fails)} benchmark drift(s):", file=sys.stderr)
+        for f in fails:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("\nOK: fresh benchmarks match the committed baselines")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
