@@ -24,6 +24,10 @@ the TPU-side projection lives in EXPERIMENTS.md §Roofline).
   segscan        segmented scan: segment-count × mean-segment-length × method
                  on ragged packed batches, vs the dense-pad baseline
                  -> BENCH_segscan.json
+  linrec         linear-recurrence scan (y = a*y_prev + b): batch × length ×
+                 method × dtype on gated-decay payloads — the recurrent-model
+                 decode workload on the weighted-triangular matmul scan
+                 -> BENCH_linrec.json
 """
 from __future__ import annotations
 
@@ -396,6 +400,48 @@ def segscan_sweep(smoke=False):
 
 
 # ---------------------------------------------------------------------------
+# linrec: linear-recurrence scan over gated decays (ISSUE 5 tentpole)
+# ---------------------------------------------------------------------------
+
+
+def linrec_sweep(smoke=False):
+    """Linear recurrence ``y = a*y_prev + b``: S × L × method × dtype sweep.
+
+    Payloads model the recurrent-decode workload: multipliers are gated
+    decays ``a = exp(-|g|) ∈ (0, 1]``, inputs Gaussian.  Every method scans
+    the same batch; the derived column reports throughput (three streams:
+    read ``a``, read ``b``, write ``y`` in the accumulation dtype) and the
+    speedup over the affine-pair ``associative_scan`` vector baseline.
+    """
+    from repro.core.linrec import linear_scan, linrec_accum_dtype_for
+    methods = ("vector", "matmul", "kernel", "blocked")
+    dts = {"float32": jnp.float32} if smoke else \
+        {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
+    s = 16 if smoke else 128
+    grid = ((2, 1024), (8, 4096)) if smoke else \
+        ((4, 16384), (16, 65536))
+    for num_rows, length in grid:
+        rng = np.random.default_rng(8)
+        a_np = np.exp(-np.abs(rng.standard_normal((num_rows, length))) * 0.05)
+        b_np = rng.standard_normal((num_rows, length))
+        for dt_name, dt in dts.items():
+            a = jnp.asarray(a_np, dt)
+            b = jnp.asarray(b_np, dt)
+            n = num_rows * length
+            nbytes = 2 * a.dtype.itemsize * n + \
+                jnp.dtype(linrec_accum_dtype_for(dt)).itemsize * n
+            base = None
+            for m in methods:
+                fn = jax.jit(lambda a, b, m=m: linear_scan(a, b, method=m,
+                                                           tile_s=s))
+                t = timeit(fn, a, b, repeats=3, warmup=1)
+                base = base or t
+                row(f"linrec/{m}/{dt_name}/S={num_rows}/L={length}", t,
+                    f"n={n};GB/s={nbytes / t / 1e9:.2f};"
+                    f"speedup_vs_vector={base / t:.2f}x")
+
+
+# ---------------------------------------------------------------------------
 # Operator benchmarks: split / sort / top-p across methods and dtypes
 # (tracks the fused-kernel trajectory, not just raw scan — ISSUE 1 tentpole)
 # ---------------------------------------------------------------------------
@@ -483,13 +529,14 @@ def main() -> None:
         "scan_pipeline": lambda: scan_pipeline_sweep(lens, smoke=args.smoke),
         "sort": lambda: sort_sweep([512] if args.smoke else lens[:2]),
         "segscan": lambda: segscan_sweep(smoke=args.smoke),
+        "linrec": lambda: linrec_sweep(smoke=args.smoke),
         "ops": lambda: ops_operators(smoke=args.smoke),
     }
     only = set(args.only.split(",")) if args.only else None
     if args.smoke and only is None:
         # fast, single-process sections (sort carries the pass-count guard)
         only = {"fig3", "fig10", "fig11", "scan_pipeline", "sort", "segscan",
-                "ops"}
+                "linrec", "ops"}
     print("name,us_per_call,derived")
     for name, fn in sections.items():
         if only and name not in only:

@@ -4,6 +4,7 @@ from repro.core.scan import (
     strictly_lower_ones, accum_dtype_for,
 )
 from repro.core.distributed import mcscan, mcscan_local
+from repro.core.linrec import linear_scan, cumprod, cummax, linrec_accum_dtype_for
 from repro.core.primitives import (
     split, multi_split, compress, radix_sort, sort, topk, top_p_sample,
     weighted_sample,
@@ -11,6 +12,6 @@ from repro.core.primitives import (
 from repro.core.segmented import (
     SegmentedBatch, boundary_flags, segment_ids, segment_scan, segment_cumsum,
     segment_sums, segment_softmax, segment_compress, segment_sort,
-    segment_topk, segment_top_p_sample,
+    segment_topk, segment_top_p_sample, segment_linear_scan,
 )
 from repro.core.ssd import ssd_scan, ssd_scan_ref, mlstm_chunked, mlstm_ref

@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.linrec import linear_scan, linrec_accum_dtype_for
 from repro.core.primitives import _encode_for_sort, _register, dispatch
 from repro.core.scan import accum_dtype_for, scan
 
@@ -49,6 +50,7 @@ __all__ = [
     "SegmentedBatch", "boundary_flags", "segment_ids", "segment_scan",
     "segment_cumsum", "segment_sums", "segment_softmax", "segment_compress",
     "segment_sort", "segment_topk", "segment_top_p_sample",
+    "segment_linear_scan",
 ]
 
 
@@ -354,6 +356,87 @@ def segment_cumsum(values, offsets=None, **kw) -> jax.Array:
         [3, 4, 9]
     """
     return segment_scan(values, offsets, **kw)
+
+
+def segment_linear_scan(a, b, offsets=None, *, exclusive: bool = False,
+                        reverse: bool = False, method: str = "matmul",
+                        initial=0.0, tile_s: int = 128, block_tiles: int = 8,
+                        accum_dtype=None) -> jax.Array:
+    """Per-segment linear recurrence ``y_t = a_t * y_{t-1} + b_t`` of a packed batch.
+
+    The segmented analogue of :func:`repro.core.linrec.linear_scan`: at every
+    segment boundary the carry resets to ``initial``.  The reset is the same
+    masked-contraction trick as ``segscan_mm`` — zeroing ``a`` at flagged
+    positions (and folding ``a_t * initial`` into ``b``) kills exactly the
+    ``W[i, j]`` entries whose window straddles a boundary, so the packed batch
+    runs as ONE unsegmented ``linear_scan`` under whichever ``method=`` is
+    requested, with no extra kernel.  Exactness matches the unsegmented
+    contract (true zeros of ``a`` are handled exactly by the weighted
+    triangle).
+
+    Args:
+        a: Packed multipliers ``(..., n)`` — or a :class:`SegmentedBatch`
+            (then ``offsets`` is taken from it); broadcast against ``b``.
+        b: Packed additive inputs ``(..., n)``, broadcast against ``a``.
+        offsets: ``(num_segments + 1,)`` int32 CSR offsets framing the last
+            axis; required unless ``a`` is a :class:`SegmentedBatch`.
+        exclusive: Return the state entering each step; segment starts get
+            ``initial``.
+        reverse: Scan each segment from its end.
+        method: One of ``METHODS`` — forwarded to ``linear_scan``.
+        initial: State the carry resets to at each segment start — a scalar,
+            or an array broadcastable against the leading (batch) dims of
+            ``a``/``b`` (it is aligned against the packed axis internally, so
+            a ``(batch,)`` initial applies per row).
+        tile_s: Tile side for the matmul scans.
+        block_tiles: Tiles per block for ``method="blocked"``.
+        accum_dtype: Accumulation dtype override.
+
+    Returns:
+        The per-segment recurrence, broadcast shape of ``a``/``b``, in the
+        linrec accumulation dtype.
+
+    Example:
+        >>> import jax.numpy as jnp
+        >>> a = jnp.asarray([2.0, 2.0, 2.0, 2.0, 2.0])
+        >>> b = jnp.ones(5)
+        >>> segment_linear_scan(a, b, jnp.asarray([0, 2, 5])).tolist()
+        [1.0, 3.0, 1.0, 3.0, 7.0]
+        >>> segment_linear_scan(a, b, jnp.asarray([0, 2, 5]),
+        ...                     initial=1.0).tolist()
+        [3.0, 7.0, 3.0, 7.0, 15.0]
+    """
+    a, offsets = _unwrap(a, offsets)
+    shp = jnp.broadcast_shapes(a.shape, b.shape)
+    a = jnp.broadcast_to(a, shp)
+    b = jnp.broadcast_to(b, shp)
+    n = a.shape[-1]
+    acc = jnp.dtype(accum_dtype) if accum_dtype is not None \
+        else linrec_accum_dtype_for(jnp.result_type(a.dtype, b.dtype))
+    if n == 0:
+        return jnp.zeros(shp, acc)
+    if reverse:
+        rev_off = (n - offsets)[::-1]
+        out = segment_linear_scan(
+            jnp.flip(a, axis=-1), jnp.flip(b, axis=-1), rev_off,
+            exclusive=exclusive, method=method, initial=initial,
+            tile_s=tile_s, block_tiles=block_tiles, accum_dtype=accum_dtype)
+        return jnp.flip(out, axis=-1)
+    flags = boundary_flags(offsets, n) > 0
+    init = jnp.asarray(initial, acc)
+    # align an array initial with the *leading* dims: the packed axis is the
+    # last one, so a per-batch-row initial needs a trailing length-1 axis.
+    init_e = init[..., None] if init.ndim else init
+    a_cut = jnp.where(flags, jnp.zeros((), acc), a.astype(acc))
+    b_cut = jnp.where(flags, b.astype(acc) + a.astype(acc) * init_e,
+                      b.astype(acc))
+    out = linear_scan(a_cut, b_cut, method=method, tile_s=tile_s,
+                      block_tiles=block_tiles, accum_dtype=acc)
+    if exclusive:
+        pad = [(0, 0)] * (out.ndim - 1) + [(1, 0)]
+        shifted = jnp.pad(out, pad)[..., :-1]
+        out = jnp.where(flags, jnp.broadcast_to(init_e, out.shape), shifted)
+    return out
 
 
 def segment_sums(values, offsets=None, *, method: str = "matmul",

@@ -14,8 +14,11 @@ O(S·Q) work is dense matmuls on the MXU:
     ``U_s`` / ``L⁻_s`` constant matrices (``cs`` = cumsum of ``a_t`` — itself computed
     with the matmul scan);
   * chunk states:                      S_c = (B ∘ decay-to-end)^T X
-  * across chunks: a length-``S/Q`` first-order scan (associative scan), the analogue
-    of the paper's block-sum scan in MCScan phase 2;
+  * across chunks: a length-``S/Q`` first-order linear recurrence
+    ``S_c = d_c * S_{c-1} + s_c`` — routed through
+    :func:`repro.core.linrec.linear_scan` under the caller's ``scan_method``,
+    so the cross-chunk phase (the MCScan phase-2 analogue) runs on the same
+    method table (matmul / vector / kernel / blocked) as every other scan;
   * off-diagonal correction:           Y_o = (C ∘ decay-from-start) H_in.
 
 Used by the Mamba2 blocks (zamba2) and the mLSTM blocks (xlstm).
@@ -27,6 +30,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.linrec import linear_scan
 from repro.core.scan import scan as mm_scan
 
 __all__ = ["ssd_scan", "ssd_scan_ref", "mlstm_chunked", "mlstm_ref"]
@@ -86,31 +90,29 @@ def ssd_scan(
     s_c = jnp.einsum("bnhq,bnqhd,bnqhp->bnhdp",
                      decay_to_end, bc.astype(jnp.float32), xc.astype(jnp.float32))
 
-    # Across-chunk first-order scan (the MCScan phase-2 analogue).
+    # Across-chunk first-order linear recurrence (the MCScan phase-2
+    # analogue): S_c = d_c * S_{c-1} + s_c, dispatched through the shared
+    # method table instead of a hand-rolled associative_scan.  The initial
+    # state folds into the recurrence exactly (b_0 + a_0 * init).
     d_c = jnp.exp(cs[..., -1])                          # (B,nc,H) total chunk decay
-
-    def combine(left, right):
-        dl, sl = left
-        dr, sr = right
-        return dl * dr, dr[..., None, None] * sl + sr
-
-    d_inc, s_inc = jax.lax.associative_scan(combine, (d_c, s_c), axis=1)
-    # State entering chunk c = inclusive state after chunk c-1 (shift right).
-    h_in = jnp.pad(s_inc, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
-    if initial_state is not None:
-        init = initial_state.astype(jnp.float32)
-        # prepend: h_in_c += (prod decays up to chunk c-1) * init
-        d_exc = jnp.pad(d_inc, ((0, 0), (1, 0), (0, 0)), constant_values=1.0)[:, :-1]
-        h_in = h_in + d_exc[..., None, None] * init[:, None]
+    init = (initial_state.astype(jnp.float32)
+            if initial_state is not None else None)
+    nc = d_c.shape[1]
+    s_inc = linear_scan(d_c[..., None, None], s_c, axis=1,
+                        method=scan_method, initial=init,
+                        tile_s=min(128, max(2, nc)))
+    # State entering chunk c = inclusive state after chunk c-1 (shift right;
+    # the first chunk enters with the initial state, if any).
+    h0 = (init[:, None] if init is not None
+          else jnp.zeros_like(s_inc[:, :1]))
+    h_in = jnp.concatenate(
+        [jnp.broadcast_to(h0, s_inc[:, :1].shape), s_inc[:, :-1]], axis=1)
 
     y_off = jnp.einsum("bnhq,bnqhd,bnhdp->bnqhp",
                        jnp.exp(cs), cc.astype(jnp.float32), h_in)
     y = (y_diag + y_off).reshape(bsz, s + pad, h, p)[:, :s]
     if return_final_state:
-        final = s_inc[:, -1]
-        if initial_state is not None:
-            final = final + d_inc[:, -1][..., None, None] * init
-        return y.astype(x.dtype), final
+        return y.astype(x.dtype), s_inc[:, -1]
     return y.astype(x.dtype)
 
 

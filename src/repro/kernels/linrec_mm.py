@@ -1,0 +1,284 @@
+"""Fused linear-recurrence (``y_t = a_t*y_{t-1} + b_t``) matmul-scan kernels.
+
+The weighted-triangular tile algebra lives in :mod:`repro.core.linrec`
+(``_pair_w`` / ``_linrec_block``); this module wraps it in the same two launch
+shapes as the prefix-scan kernels:
+
+* :func:`linrec_scan_tiles` — the ``scan_mm`` analogue: one sequential-grid
+  launch walks ``(s, s)`` tiles in order with the running state ``y`` in SMEM
+  scratch.  On the sequential grid the general affine carry ``(Π a, sum)``
+  degenerates: each tile folds the incoming state immediately
+  (``local + mult * y_in``), so only the scalar ``y`` needs carrying — the
+  full affine pair appears where summaries must compose *out of order*, i.e.
+  in the blocked pipeline's phase 2 below.
+* the §4 blocked pipeline (:func:`linrec_blocked_scan`): phase 1 reduces each
+  block to its affine summary ``(Π a, trailing affine sum)`` with cheap
+  suffix-product dot products (no ``W`` contraction — the vector-unit
+  recompute of the paper), phase 2 scans the ``nb`` summaries under affine
+  composition (one weighted-triangular contraction per batch row), and fused
+  phases 1+3 rerun the block algebra once with the carry folded in, so every
+  element is read from HBM once and written once.
+
+As in ``segscan_mm``, the in-kernel ``cumprod``/``cummax`` steps are what
+Ascend would issue as vector-core instructions; the interpret path — the CI
+target — executes them exactly, and on hardware they require Mosaic
+cumulative-op support.  dtype rules follow ``linrec_accum_dtype_for``
+(floats widen per ``accum_dtype_for``; integers accumulate in fp32 — the
+weighted triangle divides cumulative products).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.linrec import _linrec_block, _linrec_matmul, \
+    linrec_accum_dtype_for
+
+__all__ = ["linrec_scan_tiles", "linrec_blocked_scan", "linrec_block_summaries",
+           "linrec_carry_scan", "linrec_block_scan_carry"]
+
+
+def _default_interpret() -> bool:
+    """Interpret everywhere but TPU (same policy as ``scan_pipeline``)."""
+    return jax.default_backend() != "tpu"
+
+
+def _pad_affine(ab, widths):
+    """Pad an ``(a, b)`` pair with the identity affine element ``a=1, b=0``."""
+    a, b = ab
+    return jnp.pad(a, widths, constant_values=1), jnp.pad(b, widths)
+
+
+def _to_rows(a, b, n):
+    """Flatten leading dims to one batch axis of packed length-``n`` rows."""
+    lead = a.shape[:-1]
+    ab = a.reshape(-1, n) if lead else a[None]
+    bb = b.reshape(-1, n) if lead else b[None]
+    return ab, bb, lead
+
+
+# ---------------------------------------------------------------------------
+# Sequential-grid fused kernel (the linrec analogue of scan_mm)
+# ---------------------------------------------------------------------------
+
+
+def _tile_kernel(a_ref, b_ref, o_ref, carry_ref, *, acc):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        carry_ref[0, 0] = jnp.zeros((), acc)   # running state y
+
+    a = a_ref[0, 0]                            # (s, s) tile in VMEM
+    b = b_ref[0, 0]
+    out, mult = _linrec_block(a, b, acc)
+    out = out + mult * carry_ref[0, 0]
+    carry_ref[0, 0] = out[-1, -1]
+    o_ref[0, 0] = out
+
+
+def linrec_scan_tiles(a: jax.Array, b: jax.Array, *, s: int = 128,
+                      accum_dtype=None,
+                      interpret: bool | None = None) -> jax.Array:
+    """Linear recurrence over the last axis in one sequential-grid launch.
+
+    ``a``/``b``: ``(..., n)`` (already broadcast to a common shape by
+    ``linear_scan``).  Tiles of ``ℓ = s²`` elements are walked in order; the
+    SMEM scratch carries the running state across tiles (the affine carry's
+    ``Π a`` half is never consumed on a sequential walk — module docstring).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    acc = jnp.dtype(accum_dtype) if accum_dtype is not None \
+        else linrec_accum_dtype_for(jnp.result_type(a.dtype, b.dtype))
+    n = a.shape[-1]
+    ab, bb, lead = _to_rows(a, b, n)
+    rows = ab.shape[0]
+    ell = s * s
+    pad = (-n) % ell
+    if pad:
+        ab, bb = _pad_affine((ab, bb), ((0, 0), (0, pad)))
+    nt = ab.shape[-1] // ell
+    atiles = ab.reshape(rows, nt, s, s)
+    btiles = bb.reshape(rows, nt, s, s)
+    spec = pl.BlockSpec((1, 1, s, s), lambda i, j: (i, j, 0, 0))
+    out = pl.pallas_call(
+        functools.partial(_tile_kernel, acc=acc),
+        grid=(rows, nt),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((rows, nt, s, s), acc),
+        scratch_shapes=[pltpu.SMEM((1, 1), acc)],
+        interpret=interpret,
+        name=f"linrec_mm_s{s}",
+    )(atiles, btiles)
+    out = out.reshape(rows, nt * ell)[:, :n]
+    return out.reshape(*lead, n) if lead else out[0]
+
+
+# ---------------------------------------------------------------------------
+# Blocked pipeline (§4) with an affine phase-2 carry scan
+# ---------------------------------------------------------------------------
+
+
+def _suffix_prods_excl(a, acc, axis):
+    """Exclusive suffix products ``Π_{k > j} a_k`` along ``axis`` (exact, no division)."""
+    rev = jnp.flip(a.astype(acc), axis=axis)
+    cp = jnp.flip(jnp.cumprod(rev, axis=axis), axis=axis)
+    shifted = jax.lax.slice_in_dim(cp, 1, None, axis=axis)
+    ones = jnp.ones_like(jax.lax.slice_in_dim(cp, 0, 1, axis=axis))
+    return jnp.concatenate([shifted, ones], axis=axis)
+
+
+def _summary_kernel(a_ref, b_ref, p_ref, l_ref, *, acc):
+    a = a_ref[0, 0]                                    # (m, s) block view
+    b = b_ref[0, 0].astype(acc)
+    row_suf = _suffix_prods_excl(a, acc, axis=1)       # Π a after j, in-row
+    rl = jnp.sum(b * row_suf, axis=1)                  # row-local last values
+    rp = jnp.prod(a.astype(acc), axis=1)               # row products
+    rows_suf = _suffix_prods_excl(rp, acc, axis=0)     # Π of later rows
+    l_ref[0, 0] = jnp.sum(rl * rows_suf)               # trailing affine sum
+    p_ref[0, 0] = jnp.prod(rp)                         # block product
+
+
+def linrec_block_summaries(ablocks: jax.Array, bblocks: jax.Array, *,
+                           accum_dtype=None, interpret: bool | None = None):
+    """Phase 1 summary pass: the affine pair ``(Π a, trailing sum)`` per block.
+
+    The prefix pipeline reduces each block to one sum; the linear recurrence
+    reduces it to the affine map it applies to an incoming state —
+    ``y_out = p * y_in + l``.  Both components are suffix-product dot
+    products (O(m·s) vector work, no ``W`` contraction), so this pass stays
+    the cheap no-dependency recompute of the paper's phase 1.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    rows, nb, m, s = ablocks.shape
+    acc = jnp.dtype(accum_dtype) if accum_dtype is not None \
+        else linrec_accum_dtype_for(jnp.result_type(ablocks.dtype, bblocks.dtype))
+    spec = pl.BlockSpec((1, 1, m, s), lambda i, j: (i, j, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_summary_kernel, acc=acc),
+        grid=(rows, nb),
+        in_specs=[spec, spec],
+        out_specs=(pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+                   pl.BlockSpec((1, 1), lambda i, j: (i, j))),
+        out_shape=(jax.ShapeDtypeStruct((rows, nb), acc),
+                   jax.ShapeDtypeStruct((rows, nb), acc)),
+        interpret=interpret,
+        name=f"linrec_pipeline_summaries_m{m}_s{s}",
+    )(ablocks, bblocks)
+
+
+def _carry_kernel(p_ref, l_ref, o_ref, *, acc):
+    p = p_ref[0, :]
+    lv = l_ref[0, :]
+    # inclusive affine scan of the summaries; the chunked form keeps every
+    # in-register window inside the exponent-normalized range even when the
+    # block count exceeds MAX_TILE
+    inc = _linrec_matmul(p, lv, method="matmul", tile_s=128, block_tiles=0,
+                         accum_dtype=acc)
+    o_ref[0, :] = jnp.concatenate([jnp.zeros((1,), acc), inc[:-1]])
+
+
+def linrec_carry_scan(prods: jax.Array, lasts: jax.Array, *,
+                      interpret: bool | None = None) -> jax.Array:
+    """Phase 2: exclusive scan of the block summaries under affine composition.
+
+    ``carry_in[c] = Σ_{q<c} l_q · Π_{r=q+1..c-1} p_r`` — the state entering
+    block ``c`` — computed as one weighted-triangular contraction per batch
+    row (``nb`` is tiny compared to N, as in the prefix pipeline's phase 2).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    rows, nb = prods.shape
+    acc = prods.dtype
+    return pl.pallas_call(
+        functools.partial(_carry_kernel, acc=acc),
+        grid=(rows,),
+        in_specs=[pl.BlockSpec((1, nb), lambda i: (i, 0)),
+                  pl.BlockSpec((1, nb), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, nb), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, nb), acc),
+        interpret=interpret,
+        name=f"linrec_pipeline_carry_nb{nb}",
+    )(prods, lasts)
+
+
+def _block_carry_kernel(a_ref, b_ref, c_ref, o_ref, *, acc):
+    a = a_ref[0, 0]
+    b = b_ref[0, 0]
+    out, mult = _linrec_block(a, b, acc)
+    o_ref[0, 0] = out + mult * c_ref[0, 0]
+
+
+def linrec_block_scan_carry(ablocks: jax.Array, bblocks: jax.Array,
+                            carries: jax.Array, *, accum_dtype=None,
+                            interpret: bool | None = None) -> jax.Array:
+    """Fused phases 1+3: block-local recurrence + carry fold, one read/write.
+
+    Each grid step reads its block once, runs the weighted-triangular block
+    algebra in VMEM, folds the incoming state via the block multiplier
+    (``out + mult * carry``), and writes the result once — the §4
+    read/write-once property carried over to linear recurrences.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    rows, nb, m, s = ablocks.shape
+    acc = jnp.dtype(accum_dtype) if accum_dtype is not None \
+        else linrec_accum_dtype_for(jnp.result_type(ablocks.dtype, bblocks.dtype))
+    spec = pl.BlockSpec((1, 1, m, s), lambda i, j: (i, j, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_block_carry_kernel, acc=acc),
+        grid=(rows, nb),
+        in_specs=[spec, spec, pl.BlockSpec((1, 1), lambda i, j: (i, j))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((rows, nb, m, s), acc),
+        interpret=interpret,
+        name=f"linrec_pipeline_m{m}_s{s}",
+    )(ablocks, bblocks, carries)
+
+
+def linrec_blocked_scan(a: jax.Array, b: jax.Array, *, s: int = 128,
+                        block_tiles: int = 8, accum_dtype=None,
+                        interpret: bool | None = None) -> jax.Array:
+    """Linear recurrence over the last axis with the three-phase blocked pipeline.
+
+    Same decomposition as ``scan_pipeline.blocked_scan``: phase 1 computes the
+    per-block affine summaries, phase 2 composes them into per-block incoming
+    states, and fused phases 1+3 produce the final recurrence with each
+    element read and written once.  Single-block inputs skip phases 1–2 (the
+    incoming state is provably zero).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    acc = jnp.dtype(accum_dtype) if accum_dtype is not None \
+        else linrec_accum_dtype_for(jnp.result_type(a.dtype, b.dtype))
+    n = a.shape[-1]
+    ab, bb, lead = _to_rows(a, b, n)
+    rows = ab.shape[0]
+    ell = s * s
+    t = max(1, min(block_tiles, -(-n // ell)))
+    m = t * s
+    block_len = m * s
+    pad = (-n) % block_len
+    if pad:
+        ab, bb = _pad_affine((ab, bb), ((0, 0), (0, pad)))
+    nb = ab.shape[-1] // block_len
+    ablocks = ab.reshape(rows, nb, m, s)
+    bblocks = bb.reshape(rows, nb, m, s)
+    if nb == 1:
+        carries = jnp.zeros((rows, 1), acc)
+    else:
+        prods, lasts = linrec_block_summaries(ablocks, bblocks,
+                                              accum_dtype=acc,
+                                              interpret=interpret)
+        carries = linrec_carry_scan(prods, lasts, interpret=interpret)
+    out = linrec_block_scan_carry(ablocks, bblocks, carries, accum_dtype=acc,
+                                  interpret=interpret)
+    out = out.reshape(rows, nb * block_len)[:, :n]
+    return out.reshape(*lead, n) if lead else out[0]

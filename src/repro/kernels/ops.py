@@ -6,6 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.linrec_mm import linrec_blocked_scan, linrec_scan_tiles
 from repro.kernels.scan_mm import scan_tiles
 from repro.kernels.scan_pipeline import blocked_scan
 from repro.kernels.segscan_mm import seg_blocked_scan, seg_scan_tiles
@@ -20,7 +21,8 @@ from repro.kernels.ssd_chunk import ssd_chunk_scan
 __all__ = ["scan_kernel", "blocked_scan_kernel", "ssd_kernel", "split_kernel",
            "multi_split_kernel", "radix_sort_enc_kernel",
            "topp_mask_sample_kernel", "seg_scan_kernel",
-           "seg_blocked_scan_kernel"]
+           "seg_blocked_scan_kernel", "linrec_kernel",
+           "linrec_blocked_kernel"]
 
 
 @functools.partial(jax.jit, static_argnames=("s", "variant", "accum_dtype", "interpret"))
@@ -58,6 +60,24 @@ def seg_blocked_scan_kernel(x: jax.Array, flags: jax.Array, *, s: int = 128,
     """§4 blocked pipeline with a segmented phase-2 carry scan."""
     return seg_blocked_scan(x, flags, s=s, block_tiles=block_tiles,
                             accum_dtype=accum_dtype, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("s", "accum_dtype", "interpret"))
+def linrec_kernel(a: jax.Array, b: jax.Array, *, s: int = 128,
+                  accum_dtype=None, interpret: bool | None = None) -> jax.Array:
+    """Fused linear-recurrence tile scan (running state carried in SMEM)."""
+    return linrec_scan_tiles(a, b, s=s, accum_dtype=accum_dtype,
+                             interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("s", "block_tiles",
+                                             "accum_dtype", "interpret"))
+def linrec_blocked_kernel(a: jax.Array, b: jax.Array, *, s: int = 128,
+                          block_tiles: int = 8, accum_dtype=None,
+                          interpret: bool | None = None) -> jax.Array:
+    """§4 blocked pipeline with an affine phase-2 carry scan."""
+    return linrec_blocked_scan(a, b, s=s, block_tiles=block_tiles,
+                               accum_dtype=accum_dtype, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

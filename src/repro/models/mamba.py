@@ -6,6 +6,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.linrec import linear_scan
 from repro.core.ssd import ssd_scan
 from repro.kernels.ops import ssd_kernel
 from repro.models.layers import linear, ninit, rmsnorm, rmsnorm_init
@@ -101,7 +102,14 @@ def mamba_full(p, x, cfg, *, return_cache=False, use_kernel=False):
 
 
 def mamba_step(p, x, cfg, cache):
-    """Single-token decode step. x: (B,1,D); cache: {conv (B,K-1,C), ssm (B,H,N,P)}."""
+    """Single-token decode step. x: (B,1,D); cache: {conv (B,K-1,C), ssm (B,H,N,P)}.
+
+    The state update ``h = exp(a)·h + B ⊗ x`` is a length-1 linear recurrence,
+    routed through :func:`repro.core.linrec.linear_scan` under
+    ``cfg.scan_method`` — the same dispatch surface as prefill (length-1
+    scans short-circuit to the direct fused multiply-add, bit-identical for
+    every method, so decode pays no per-token kernel launch).
+    """
     s = cfg.ssm
     b = x.shape[0]
     d_inner = s.expand * cfg.d_model
@@ -119,8 +127,10 @@ def mamba_step(p, x, cfg, cache):
     bm = jnp.repeat(bmat.reshape(b, g, s.d_state), rep, axis=1)            # (B,H,N)
     cm = jnp.repeat(cmat.reshape(b, g, s.d_state), rep, axis=1)
     h = cache["ssm"]                                   # (B,H,N,P) f32
-    h = jnp.exp(a_log[:, 0])[..., None, None] * h + jnp.einsum(
-        "bhn,bhp->bhnp", bm.astype(F32), xh.astype(F32))
+    decay = jnp.exp(a_log[:, 0])[..., None, None]      # (B,H,1,1)
+    upd = jnp.einsum("bhn,bhp->bhnp", bm.astype(F32), xh.astype(F32))
+    h = linear_scan(decay[..., None], upd[..., None], axis=-1,
+                    method=cfg.scan_method, initial=h)[..., 0]
     y = jnp.einsum("bhn,bhnp->bhp", cm.astype(F32), h)
     y = y + xh.astype(F32) * p["d_skip"].astype(F32)[:, None]
     y = y.reshape(b, 1, d_inner).astype(x.dtype)

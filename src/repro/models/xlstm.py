@@ -7,6 +7,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.linrec import linear_scan
 from repro.core.ssd import mlstm_chunked
 from repro.models.layers import linear, ninit, rmsnorm, rmsnorm_init
 from repro.models.mamba import _causal_conv
@@ -94,7 +95,15 @@ def mlstm_block(p, x, cfg, *, return_cache=False):
 
 
 def mlstm_block_step(p, x, cfg, cache):
-    """Single-token decode with the official running-max stabilisation."""
+    """Single-token decode with the official running-max stabilisation.
+
+    The gated cell/normaliser updates ``C = f·C + i·k v^T`` and
+    ``n = f·n + i·k`` are one joint length-1 linear recurrence (the
+    normaliser rides along as an extra memory column), routed through
+    :func:`repro.core.linrec.linear_scan` under ``cfg.scan_method`` — the
+    same dispatch surface as prefill (length-1 scans short-circuit to the
+    direct fused multiply-add, bit-identical for every method).
+    """
     xl = cfg.xlstm
     b = x.shape[0]
     d_inner = int(xl.proj_factor * cfg.d_model)
@@ -109,9 +118,15 @@ def mlstm_block_step(p, x, cfg, cache):
     m_new = jnp.maximum(ft + m, it)
     fs = jnp.exp(ft + m - m_new)
     is_ = jnp.exp(it - m_new)
-    c = fs[..., None, None] * c + is_[..., None, None] * jnp.einsum(
-        "bhd,bhp->bhdp", kt, vt)
-    n = fs[..., None] * n + is_[..., None] * kt
+    # Joint state (C | n): (B,H,D,P+1); the decay fs multiplies both, the
+    # update is (i·k v^T | i·k).  One linear_scan step updates the pair.
+    cn = jnp.concatenate([c, n[..., None]], axis=-1)
+    upd = jnp.concatenate(
+        [is_[..., None, None] * jnp.einsum("bhd,bhp->bhdp", kt, vt),
+         (is_[..., None] * kt)[..., None]], axis=-1)
+    cn = linear_scan(fs[..., None, None, None], upd[..., None], axis=-1,
+                     method=cfg.scan_method, initial=cn)[..., 0]
+    c, n = cn[..., :-1], cn[..., -1]
     num = jnp.einsum("bhd,bhdp->bhp", qt, c)
     den = jnp.einsum("bhd,bhd->bh", qt, n)
     h = (num / (jnp.abs(den) + 1e-6)[..., None]).reshape(b, 1, d_inner)

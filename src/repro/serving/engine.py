@@ -4,15 +4,20 @@ radix sort + prefix sum + inverse-transform sample, all on the matmul scan).
 ``sampler="topp_segmented"`` routes the same operator through the segmented
 subsystem: the batch's logit rows become segments of one packed array, so a
 ragged decode batch (rows of different active vocab slices, via
-``sample_packed``) top-p samples in one launch without padding."""
+``sample_packed``) top-p samples in one launch without padding.
+``scan_method=`` overrides the model config's scan method, so stateful decode
+(the SSM/mLSTM linear-recurrence state updates, which route through
+``repro.core.linrec.linear_scan``) can pick the fused kernel or blocked
+pipeline without rebuilding the config by hand."""
 from __future__ import annotations
 
-from typing import Dict
+import dataclasses
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.primitives import top_p_sample
+from repro.core.primitives import METHODS, top_p_sample
 from repro.core.segmented import SegmentedBatch, segment_top_p_sample
 from repro.models.model import build_model
 from repro.utils.sharding import use_mesh
@@ -24,13 +29,19 @@ class ServeEngine:
 
     def __init__(self, cfg, params, *, mesh=None, max_len: int = 512,
                  top_p: float = 0.9, temperature: float = 1.0,
-                 sampler: str = "topp_scan", bits_per_pass: int = 4):
+                 sampler: str = "topp_scan", bits_per_pass: int = 4,
+                 scan_method: Optional[str] = None):
         if sampler not in self.SAMPLERS:
             raise ValueError(
                 f"unknown sampler {sampler!r}; expected one of {self.SAMPLERS}")
         if not 1 <= bits_per_pass <= 8:  # eager: fail at construction, not in jit
             raise ValueError(
                 f"bits_per_pass must be in [1, 8], got {bits_per_pass}")
+        if scan_method is not None:
+            if scan_method not in METHODS:
+                raise ValueError(f"unknown scan_method {scan_method!r}; "
+                                 f"expected one of {METHODS}")
+            cfg = dataclasses.replace(cfg, scan_method=scan_method)
         self.cfg = cfg
         self.params = params
         self.mesh = mesh

@@ -1,0 +1,542 @@
+"""Linear-recurrence scan (``linear_scan``): the four-method parity contract.
+
+Bit-identity strategy (the linrec extension of the pipeline tests' rule):
+multipliers drawn from {-1, 0, 1} keep every cumulative product in {-1, 0, 1}
+and every windowed-product quotient exact, so all partial results of every
+method — affine-pair ``associative_scan``, weighted-triangular ``W @ b``
+contractions, the fused tile kernel, the blocked pipeline — are exactly
+representable integers and must agree to the bit.  Gated fp32/bf16
+recurrences (``a = exp(-|g|)``) are additionally checked against a sequential
+``lax.scan`` oracle and cross-method to tight tolerance.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+try:  # property tests skip (not error) in minimal environments
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+from repro.core import cummax, cumprod, linear_scan
+from repro.core.linrec import linrec_accum_dtype_for
+from repro.core.segmented import segment_linear_scan
+
+METHODS = ("vector", "matmul", "kernel", "blocked")
+KW = dict(tile_s=8, block_tiles=2)
+# Ragged on purpose: sub-tile, off-by-one from tile/block multiples, primes.
+LENGTHS = (1, 2, 7, 63, 64, 65, 257, 1000)
+
+
+def _int_pair(n, seed=0, lo=-3, hi=4):
+    """Integer-valued (a, b) with a in {-1, 0, 1} — exact under any method."""
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-1, 2, n).astype(np.float32)
+    b = rng.integers(lo, hi, n).astype(np.float32)
+    return jnp.asarray(a), jnp.asarray(b)
+
+
+def _gated_pair(n, seed=0, dtype=jnp.float32):
+    """Gated-recurrence payload: a = exp(-|g|) in (0, 1], b ~ N(0, 1)."""
+    rng = np.random.default_rng(seed)
+    a = np.exp(-np.abs(rng.standard_normal(n)) * 0.1).astype(np.float32)
+    b = rng.standard_normal(n).astype(np.float32)
+    return jnp.asarray(a, dtype), jnp.asarray(b, dtype)
+
+
+def _seq_ref(a, b, init=0.0):
+    """Sequential lax.scan oracle in fp32."""
+    def step(y, t):
+        at, bt = t
+        y = at * y + bt
+        return y, y
+    _, ys = jax.lax.scan(
+        step, jnp.asarray(init, jnp.float32),
+        (jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32)))
+    return np.asarray(ys)
+
+
+# ---------------------------------------------------------------------------
+# bit-parity on integer-valued payloads
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", METHODS[1:])
+@pytest.mark.parametrize("n", LENGTHS)
+def test_bit_identical_to_vector_int_payload(method, n):
+    a, b = _int_pair(n, seed=n)
+    ref = linear_scan(a, b, method="vector", **KW)
+    got = linear_scan(a, b, method=method, **KW)
+    assert got.dtype == ref.dtype
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_matches_sequential_oracle_int(method):
+    a, b = _int_pair(321, seed=5)
+    got = linear_scan(a, b, method=method, **KW)
+    np.testing.assert_array_equal(np.asarray(got), _seq_ref(a, b))
+
+
+@pytest.mark.parametrize("method", METHODS[1:])
+@pytest.mark.parametrize("dtype", [jnp.int8, jnp.int32, jnp.bool_])
+def test_integer_dtypes_accumulate_fp32(method, dtype):
+    """Integer/bool inputs accumulate in fp32 (documented linrec dtype rule)."""
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(rng.integers(0, 2, 100), dtype)
+    b = jnp.asarray(rng.integers(0, 2, 100), dtype)
+    ref = linear_scan(a, b, method="vector", **KW)
+    got = linear_scan(a, b, method=method, **KW)
+    assert got.dtype == jnp.float32 == linrec_accum_dtype_for(dtype)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@pytest.mark.parametrize("method", METHODS[1:])
+def test_exclusive_reverse_axis_initial_parity(method):
+    a, b = _int_pair(130, seed=9)
+    a2 = a.reshape(2, 65)
+    b2 = b.reshape(2, 65)
+    for kw in (dict(exclusive=True), dict(reverse=True),
+               dict(exclusive=True, reverse=True), dict(initial=5.0),
+               dict(initial=-2.0, exclusive=True), dict(axis=0)):
+        ref = linear_scan(a2, b2, method="vector", **KW, **kw)
+        got = linear_scan(a2, b2, method=method, **KW, **kw)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref)), kw
+
+
+def test_exclusive_initial_semantics():
+    a = jnp.asarray([2.0, 2.0, 2.0])
+    b = jnp.asarray([1.0, 1.0, 1.0])
+    out = linear_scan(a, b, exclusive=True, initial=3.0, **KW)
+    # state entering each step: [init, y_0, y_1] with y_0 = 2*3 + 1 = 7
+    assert out.tolist() == [3.0, 7.0, 15.0]
+
+
+def test_zeros_in_a_reset_exactly():
+    """True zeros of ``a`` cut every window — the masked-W edge case."""
+    a = jnp.asarray([2.0, 0.0, 2.0, 2.0, 0.0, 1.0])
+    b = jnp.asarray([1.0, 3.0, 1.0, 1.0, 4.0, 1.0])
+    want = _seq_ref(a, b)
+    for m in METHODS:
+        got = linear_scan(a, b, method=m, tile_s=2, block_tiles=1)
+        np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_a_ones_recovers_cumsum():
+    _, b = _int_pair(200, seed=11)
+    got = linear_scan(jnp.ones_like(b), b, method="matmul", **KW)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.cumsum(np.asarray(b)).astype(np.float32))
+
+
+def test_unknown_method_raises():
+    a, b = _int_pair(4)
+    with pytest.raises(ValueError, match="unknown scan method"):
+        linear_scan(a, b, method="nope")
+    with pytest.raises(ValueError, match="unknown scan method"):
+        cummax(a, method="nope")
+    with pytest.raises(ValueError, match="tile_s"):
+        linear_scan(a, b, tile_s=512)
+    with pytest.raises(TypeError):  # no silent kwarg swallowing
+        cummax(a, exclusive=True)
+
+
+def test_exclusive_with_array_initial():
+    """Array initial (leading-dims shaped) works with exclusive=True."""
+    a = jnp.ones((2, 3, 4))
+    b = jnp.ones((2, 3, 4))
+    init = jnp.asarray([[1.0, 2.0, 3.0], [4.0, 5.0, 6.0]])
+    out = linear_scan(a, b, exclusive=True, initial=init, method="matmul", **KW)
+    np.testing.assert_array_equal(np.asarray(out[..., 0]), np.asarray(init))
+    ref = linear_scan(a, b, exclusive=True, initial=init, method="vector", **KW)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_shared_decay_broadcast_parity(method):
+    """Decay shared over payload dims (the SSD cross-chunk shape).
+
+    ``a`` stays unbroadcast through the matmul path — one weighted triangle
+    serves the whole payload batch — and every method still matches looping
+    the fully-broadcast scan.
+    """
+    rng = np.random.default_rng(17)
+    a = jnp.asarray(rng.integers(-1, 2, (2, 33, 1, 1)).astype(np.float32))
+    b = jnp.asarray(rng.integers(-2, 3, (2, 33, 3, 4)).astype(np.float32))
+    got = linear_scan(a, b, axis=1, method=method, **KW)
+    ref = linear_scan(jnp.broadcast_to(a, b.shape), b, axis=1,
+                      method="vector", **KW)
+    assert got.shape == b.shape
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_shared_decay_matmul_builds_one_triangle():
+    """The matmul path must NOT materialize a per-payload-element triangle."""
+    a = jnp.ones((1, 64, 1, 1))          # decay shared across the (8, 8) payload
+    b = jnp.ones((1, 64, 8, 8))
+    jaxpr = jax.make_jaxpr(
+        lambda a, b: linear_scan(a, b, axis=1, method="matmul", tile_s=16))(a, b)
+    biggest = max((int(np.prod(v.aval.shape))
+                   for eqn in jaxpr.eqns for v in eqn.outvars), default=0)
+    # W for shared a is (1,1,1,nc,q,q) = 4*16*16; a per-element W would be
+    # 64x larger than the payload (1*64*8*8*16... ) — cap well below that.
+    assert biggest <= 4 * int(np.prod(b.shape)), biggest
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_shared_decay_gradients(method):
+    """Adjoint sum-reduces the shared-decay cotangent back to its shape."""
+    rng = np.random.default_rng(18)
+    a = jnp.asarray(np.exp(-np.abs(rng.standard_normal((5, 1)))), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((5, 3)), jnp.float32)
+    ga, gb = jax.grad(
+        lambda a, b: jnp.sum(linear_scan(a, b, axis=0, method=method, **KW) ** 2),
+        argnums=(0, 1))(a, b)
+    assert ga.shape == a.shape and gb.shape == b.shape
+    va, vb = jax.grad(
+        lambda a, b: jnp.sum(linear_scan(
+            jnp.broadcast_to(a, b.shape), b, axis=0, method="vector", **KW) ** 2),
+        argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(va.sum(1, keepdims=True)),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(vb), rtol=1e-4,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_length_one_short_circuits_without_launch(method):
+    """n == 1 is the decode step: exact FMA, no kernel launch, any method."""
+    a = jnp.asarray([[0.5], [2.0]])
+    b = jnp.asarray([[1.0], [3.0]])
+    out = linear_scan(a, b, method=method, initial=jnp.asarray([4.0, -1.0]))
+    np.testing.assert_array_equal(np.asarray(out), [[3.0], [1.0]])
+    launches = _count_pallas_launches(
+        lambda a, b: linear_scan(a, b, method=method,
+                                 initial=jnp.asarray([4.0, -1.0])),
+        "linrec", a, b)
+    assert launches == 0
+
+
+def test_broadcasting_and_empty():
+    out = linear_scan(jnp.asarray(0.5), jnp.ones((2, 5)), method="matmul", **KW)
+    assert out.shape == (2, 5)
+    np.testing.assert_allclose(np.asarray(out)[1],
+                               2.0 - 0.5 ** np.arange(5), rtol=1e-6)
+    z = linear_scan(jnp.ones((3, 0)), jnp.ones((3, 0)), method="kernel", **KW)
+    assert z.shape == (3, 0)
+
+
+# ---------------------------------------------------------------------------
+# gated recurrences: fp32/bf16 tolerance contract
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("n", (63, 257, 1000))
+def test_gated_fp32_close_to_sequential(method, n):
+    a, b = _gated_pair(n, seed=n)
+    got = np.asarray(linear_scan(a, b, method=method, **KW))
+    np.testing.assert_allclose(got, _seq_ref(a, b), rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("method", METHODS[1:])
+def test_gated_bf16_accumulates_fp32(method):
+    a, b = _gated_pair(500, seed=1, dtype=jnp.bfloat16)
+    ref = linear_scan(a, b, method="vector", **KW)
+    got = linear_scan(a, b, method=method, **KW)
+    assert got.dtype == jnp.float32 == ref.dtype
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_deep_decay_underflow_is_finite(method):
+    """Cumulative products that underflow flush to 0 — never NaN."""
+    a = jnp.full((4096,), 0.5, jnp.float32)
+    b = jnp.ones((4096,), jnp.float32)
+    got = np.asarray(linear_scan(a, b, method=method, tile_s=64))
+    assert np.all(np.isfinite(got))
+    np.testing.assert_allclose(got, 2.0 - 0.5 ** np.arange(4096), rtol=1e-5)
+
+
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("decay", (0.25, 0.05))
+def test_moderate_decay_full_tile_stays_accurate(method, decay):
+    """Constant moderate decay over a full default tile (the regression case).
+
+    ``0.25**k`` underflows fp32 inside one 128-element tile; the exponent-
+    normalized ``W`` must keep every *short* window exact rather than
+    flushing all windows anchored past the underflow point.
+    """
+    n = 512
+    a = jnp.full((n,), decay, jnp.float32)
+    b = jnp.asarray(np.random.default_rng(31).standard_normal(n), jnp.float32)
+    got = np.asarray(linear_scan(a, b, method=method, tile_s=128))
+    want = _seq_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=3e-6, atol=3e-6)
+
+
+def test_moderate_decay_long_ssd_sequence():
+    """The reviewer scenario: ssd_scan long-sequence moderate decay, every method."""
+    from repro.core.ssd import ssd_scan, ssd_scan_ref
+    rng = np.random.default_rng(32)
+    b_, s_ = 1, 2048
+    x = jnp.asarray(rng.standard_normal((b_, s_, 2, 4)), jnp.float32)
+    al = jnp.full((b_, s_, 2), np.log(0.95), jnp.float32)   # ~0.2 per 32-chunk
+    bm = jnp.asarray(rng.standard_normal((b_, s_, 2, 3)) * 0.3, jnp.float32)
+    cm = jnp.asarray(rng.standard_normal((b_, s_, 2, 3)) * 0.3, jnp.float32)
+    ref = np.asarray(ssd_scan_ref(x, al, bm, cm))
+    for method in METHODS:
+        got = np.asarray(ssd_scan(x, al, bm, cm, chunk=32, scan_method=method))
+        np.testing.assert_allclose(got, ref, rtol=2e-3, atol=2e-3,
+                                   err_msg=method)
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_gradients_match_analytic_adjoint(method):
+    a, b = _gated_pair(200, seed=7)
+    a = a.at[3].set(0.0)           # exact reset inside the window
+    ga, gb = jax.grad(
+        lambda a, b: jnp.sum(linear_scan(a, b, method=method, **KW) ** 2),
+        argnums=(0, 1))(a, b)
+    va, vb = jax.grad(
+        lambda a, b: jnp.sum(linear_scan(a, b, method="vector", **KW) ** 2),
+        argnums=(0, 1))(a, b)
+    assert np.all(np.isfinite(np.asarray(ga)))
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(va),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(vb),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# convenience wrappers: cumprod / cummax
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_cumprod_parity(method):
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.choice([-1.0, 0.0, 1.0, 2.0], 80).astype(np.float32))
+    got = cumprod(x, method=method, **KW)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.cumprod(np.asarray(x)).astype(np.float32))
+
+
+@pytest.mark.parametrize("method", METHODS[1:])
+@pytest.mark.parametrize("dtype", [jnp.int32, jnp.int8, jnp.float32])
+def test_cummax_bit_identical(method, dtype):
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.integers(-100, 100, 313), dtype)
+    ref = cummax(x, method="vector")
+    got = cummax(x, method=method, tile_s=8)
+    assert got.dtype == x.dtype == ref.dtype
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_cummax_bool_prefix_any(method):
+    """Bool cummax == prefix-any, still bool, for every method."""
+    x = jnp.asarray([False, False, True, False, True])
+    out = cummax(x, method=method, tile_s=2)
+    assert out.dtype == jnp.bool_
+    assert out.tolist() == [False, False, True, True, True]
+
+
+def test_cummax_reverse_axis():
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.integers(-9, 9, (3, 40)), jnp.int32)
+    got = cummax(x, axis=0, reverse=True, method="matmul", tile_s=8)
+    want = jnp.flip(jax.lax.cummax(jnp.flip(x, 0), axis=0), 0)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# segment_linear_scan: boundary resets on the packed layout
+# ---------------------------------------------------------------------------
+
+
+def _loop_linrec(a, b, offsets, init=0.0, **kw):
+    """Oracle: run 1-D linear_scan(method="vector") per segment slice."""
+    out = np.zeros(a.shape[-1], np.float32)
+    for i in range(len(offsets) - 1):
+        lo, hi = int(offsets[i]), int(offsets[i + 1])
+        if hi > lo:
+            out[lo:hi] = np.asarray(linear_scan(
+                a[lo:hi], b[lo:hi], method="vector", initial=init, **kw))
+    return out
+
+
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("offsets", [
+    [0, 57],                                # one segment == unsegmented
+    [0, 0, 5, 5, 20, 21, 57],               # empties + len-1 + ragged
+    [0, 1, 2, 3, 57],                       # tiny leading segments
+])
+def test_segment_linear_scan_matches_loop(method, offsets):
+    rng = np.random.default_rng(13)
+    a = jnp.asarray(rng.integers(-1, 2, 57).astype(np.float32))
+    b = jnp.asarray(rng.integers(-3, 4, 57).astype(np.float32))
+    off = jnp.asarray(offsets, jnp.int32)
+    for init in (0.0, 2.0):
+        got = segment_linear_scan(a, b, off, method=method, initial=init, **KW)
+        np.testing.assert_array_equal(
+            np.asarray(got), _loop_linrec(a, b, offsets, init))
+
+
+@pytest.mark.parametrize("method", ("vector", "matmul"))
+def test_segment_linear_scan_exclusive_reverse(method):
+    rng = np.random.default_rng(14)
+    a = jnp.asarray(rng.integers(-1, 2, 31).astype(np.float32))
+    b = jnp.asarray(rng.integers(-2, 3, 31).astype(np.float32))
+    offsets = [0, 4, 4, 17, 31]
+    off = jnp.asarray(offsets, jnp.int32)
+    ex = segment_linear_scan(a, b, off, method=method, exclusive=True,
+                             initial=3.0, **KW)
+    # segment starts carry the initial state; others the shifted inclusive
+    inc = segment_linear_scan(a, b, off, method=method, initial=3.0, **KW)
+    want = np.asarray(inc)
+    want = np.concatenate([[0.0], want[:-1]])
+    for s in offsets[:-1]:
+        if s < 31:
+            want[s] = 3.0
+    np.testing.assert_array_equal(np.asarray(ex), want)
+    rev = segment_linear_scan(a, b, off, method=method, reverse=True, **KW)
+    # reverse == flipping each segment, scanning, flipping back
+    want_r = np.zeros(31, np.float32)
+    for i in range(len(offsets) - 1):
+        lo, hi = offsets[i], offsets[i + 1]
+        if hi > lo:
+            want_r[lo:hi] = np.asarray(linear_scan(
+                jnp.flip(a[lo:hi]), jnp.flip(b[lo:hi]),
+                method="vector"))[::-1]
+    np.testing.assert_array_equal(np.asarray(rev), want_r)
+
+
+@pytest.mark.parametrize("method", ("vector", "matmul"))
+def test_segment_linear_scan_array_initial_per_row(method):
+    """A (batch,)-shaped initial applies per batch row, not per position."""
+    rng = np.random.default_rng(15)
+    a = jnp.asarray(rng.integers(-1, 2, (3, 10)).astype(np.float32))
+    b = jnp.asarray(rng.integers(-2, 3, (3, 10)).astype(np.float32))
+    offsets = [0, 4, 10]
+    init = jnp.asarray([1.0, -2.0, 3.0])
+    got = segment_linear_scan(a, b, jnp.asarray(offsets), method=method,
+                              initial=init, **KW)
+    want = np.stack([
+        _loop_linrec_row(np.asarray(a[r]), np.asarray(b[r]), offsets,
+                         float(init[r]))
+        for r in range(3)])
+    np.testing.assert_array_equal(np.asarray(got), want)
+    ex = segment_linear_scan(a, b, jnp.asarray(offsets), method=method,
+                             initial=init, exclusive=True, **KW)
+    # every segment start carries its row's initial
+    for s in offsets[:-1]:
+        np.testing.assert_array_equal(np.asarray(ex[:, s]), np.asarray(init))
+
+
+def _loop_linrec_row(a, b, offsets, init):
+    """1-row oracle for the array-initial test."""
+    out = np.zeros(a.shape[-1], np.float32)
+    for i in range(len(offsets) - 1):
+        lo, hi = int(offsets[i]), int(offsets[i + 1])
+        y = init
+        for t in range(lo, hi):
+            y = a[t] * y + b[t]
+            out[t] = y
+    return out
+
+
+def test_segment_linear_scan_empty_packed():
+    out = segment_linear_scan(jnp.zeros((0,)), jnp.zeros((0,)),
+                              jnp.asarray([0, 0, 0]), method="matmul")
+    assert out.shape == (0,)
+
+
+# ---------------------------------------------------------------------------
+# launch-count guards (mirrors the segscan jaxpr guard)
+# ---------------------------------------------------------------------------
+
+
+def _count_pallas_launches(fn, substr, *args) -> int:
+    def walk(jaxpr):
+        total = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                nm = eqn.params.get("name_and_src_info",
+                                    eqn.params.get("name", ""))
+                if substr in str(nm):
+                    total += 1
+            for v in eqn.params.values():
+                if hasattr(v, "jaxpr"):
+                    total += walk(v.jaxpr)
+                elif hasattr(v, "eqns"):
+                    total += walk(v)
+        return total
+
+    return walk(jax.make_jaxpr(fn)(*args).jaxpr)
+
+
+def test_linrec_kernel_launch_counts():
+    a, b = _gated_pair(1000, seed=21)
+    got = _count_pallas_launches(
+        lambda a, b: linear_scan(a, b, method="kernel", tile_s=8),
+        "linrec_mm", a, b)
+    assert got == 1                 # one fused sequential-grid launch
+
+    # multi-block: summaries + affine carry scan + fused phases 1+3
+    got = _count_pallas_launches(
+        lambda a, b: linear_scan(a, b, method="blocked", tile_s=8,
+                                 block_tiles=2),
+        "linrec_pipeline", a, b)
+    assert got == 3
+
+    # single block: carry provably zero — phases 1-2 elided
+    a1, b1 = _gated_pair(100, seed=22)
+    got = _count_pallas_launches(
+        lambda a, b: linear_scan(a, b, method="blocked", tile_s=8,
+                                 block_tiles=2),
+        "linrec_pipeline", a1, b1)
+    assert got == 1
+
+
+# ---------------------------------------------------------------------------
+# property-based (hypothesis): random payloads vs the vector oracle
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.sampled_from([-1, 0, 1]), min_size=1, max_size=80),
+           st.lists(st.integers(-4, 4), min_size=1, max_size=80),
+           st.sampled_from(["matmul", "kernel", "blocked"]))
+    def test_linear_scan_property(avals, bvals, method):
+        n = min(len(avals), len(bvals))
+        a = jnp.asarray(avals[:n], jnp.float32)
+        b = jnp.asarray(bvals[:n], jnp.float32)
+        ref = linear_scan(a, b, method="vector", **KW)
+        got = linear_scan(a, b, method=method, **KW)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.lists(st.sampled_from([-1, 0, 1]), min_size=1, max_size=60),
+           st.lists(st.integers(0, 60), min_size=0, max_size=5),
+           st.sampled_from(["matmul", "blocked"]))
+    def test_segment_linear_scan_property(avals, cuts, method):
+        n = len(avals)
+        a = jnp.asarray(avals, jnp.float32)
+        b = jnp.ones((n,), jnp.float32)
+        offsets = np.concatenate(
+            [[0], np.sort(np.clip(cuts, 0, n)), [n]]).astype(np.int32)
+        got = segment_linear_scan(a, b, jnp.asarray(offsets), method=method,
+                                  **KW)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      _loop_linrec(a, b, offsets))
+
+else:  # pragma: no cover
+
+    @pytest.mark.skip(reason="hypothesis not installed — property tests skipped")
+    def test_linear_scan_property_placeholder():
+        pass  # visible placeholder so missing hypothesis shows as a skip

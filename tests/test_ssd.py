@@ -5,6 +5,17 @@ import pytest
 
 from repro.core.ssd import mlstm_chunked, mlstm_ref, ssd_scan, ssd_scan_ref
 
+METHODS = ("vector", "matmul", "kernel", "blocked")
+
+
+def _ssd_args(b, s, h, p, n, seed=0, decay=0.2):
+    rng = np.random.default_rng(seed)
+    return (jnp.asarray(rng.standard_normal((b, s, h, p)), jnp.float32),
+            jnp.asarray(-np.abs(rng.standard_normal((b, s, h)) * decay),
+                        jnp.float32),
+            jnp.asarray(rng.standard_normal((b, s, h, n)) * 0.3, jnp.float32),
+            jnp.asarray(rng.standard_normal((b, s, h, n)) * 0.3, jnp.float32))
+
 
 @pytest.mark.parametrize("chunk", [16, 32, 128])
 def test_ssd_chunked_matches_sequential(chunk):
@@ -39,6 +50,55 @@ def test_ssd_state_carry_and_initial_state():
     yb = ssd_scan(*a2, chunk=16, initial_state=sta)
     np.testing.assert_allclose(np.asarray(jnp.concatenate([ya, yb], 1)),
                                np.asarray(y2), rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("s,chunk", [
+    (100, 24),     # non-divisible: 100 = 4*24 + 4 (ragged final chunk)
+    (257, 32),     # prime length, many chunks
+    (700, 64),     # longer sequence, ragged tail
+])
+def test_ssd_all_scan_methods_long_and_ragged(method, s, chunk):
+    """Cross-chunk phase routed through each linear_scan method (PR 5).
+
+    Previously only the rectangular happy path was pinned; this sweeps
+    longer sequences and chunk sizes that do NOT divide the length, for all
+    four methods of the rebuilt cross-chunk linear recurrence.
+    """
+    args = _ssd_args(2, s, 2, 4, 3, seed=s + chunk)
+    y = ssd_scan(*args, chunk=chunk, scan_method=method)
+    ref = ssd_scan_ref(*args)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=2e-3,
+                               atol=2e-3)
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_ssd_state_handoff_each_method_ragged(method):
+    """State carry across a split point, ragged chunks, per method."""
+    s, half, chunk = 90, 41, 16     # both halves ragged w.r.t. the chunk
+    args = _ssd_args(1, s, 2, 4, 4, seed=7)
+    _, ref_state = ssd_scan_ref(*args, return_final_state=True)
+    y_ref = ssd_scan_ref(*args)
+    a1 = tuple(t[:, :half] for t in args)
+    a2 = tuple(t[:, half:] for t in args)
+    ya, sta = ssd_scan(*a1, chunk=chunk, scan_method=method,
+                       return_final_state=True)
+    yb, stb = ssd_scan(*a2, chunk=chunk, scan_method=method,
+                       initial_state=sta, return_final_state=True)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([ya, yb], 1)),
+                               np.asarray(y_ref), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(stb), np.asarray(ref_state),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_strong_decay_long_sequence_finite():
+    """Deep decay over many chunks: underflowed carries flush, never NaN."""
+    args = _ssd_args(1, 1024, 2, 4, 2, seed=3, decay=1.0)
+    ref = np.asarray(ssd_scan_ref(*args))
+    for method in METHODS:
+        y = np.asarray(ssd_scan(*args, chunk=32, scan_method=method))
+        assert np.all(np.isfinite(y)), method
+        np.testing.assert_allclose(y, ref, rtol=5e-3, atol=5e-3)
 
 
 def test_mlstm_chunked_matches_sequential():

@@ -40,3 +40,39 @@ def test_greedy_vs_topp_sampler_agree_when_peaked():
     tg = np.asarray(g.generate({"tokens": prompts}, 4, jax.random.PRNGKey(1)))
     tp = np.asarray(p.generate({"tokens": prompts}, 4, jax.random.PRNGKey(1)))
     assert np.mean(tg == tp) > 0.6
+
+
+def test_serve_engine_scan_method_override_recurrent_decode():
+    """ServeEngine(scan_method=...) picks the linear_scan path for SSM decode.
+
+    Greedy decode of a recurrent (Mamba2) model must produce the same tokens
+    whichever linear-recurrence method the stateful state updates run on —
+    the decode-side face of the linrec parity contract.
+    """
+    from repro.models.model import build_model
+
+    cfg = get_config("zamba2-1.2b", smoke=True)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    prompts = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 16)))
+    ref = None
+    for method in ("vector", "matmul"):
+        eng = ServeEngine(cfg, params, max_len=32, sampler="greedy",
+                          scan_method=method)
+        assert eng.cfg.scan_method == method
+        toks = np.asarray(eng.generate({"tokens": prompts}, 4,
+                                       jax.random.PRNGKey(1)))
+        if ref is None:
+            ref = toks
+        else:
+            np.testing.assert_array_equal(toks, ref)
+
+
+def test_serve_engine_rejects_unknown_scan_method():
+    cfg = get_config("llama3-8b", smoke=True)
+    try:
+        ServeEngine(cfg, None, scan_method="cube")
+    except ValueError as e:
+        assert "scan_method" in str(e)
+    else:  # pragma: no cover
+        raise AssertionError("expected ValueError for unknown scan_method")
