@@ -47,6 +47,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks.common import dump_json, row, timeit  # noqa: E402
 from repro.core import accum_dtype_for, scan  # noqa: E402
+from repro.core.autotune import resolve_method  # noqa: E402
 from repro.core.primitives import (compress, radix_sort, split,  # noqa: E402
                                    top_p_sample)
 
@@ -54,7 +55,15 @@ QUICK_LENS = [4096, 65536, 1 << 20]
 FULL_LENS = [4096, 65536, 1 << 20, 1 << 23]
 SMOKE_LENS = [2048, 16384]
 
-OP_METHODS = ("vector", "matmul", "kernel")
+# "auto" rows ride along in every sweep so tools/compare_bench.py can gate
+# them against the per-row oracle (best measured concrete method); their
+# derived column records what the tuning table resolved to.
+OP_METHODS = ("vector", "matmul", "kernel", "auto")
+
+
+def _resolved(op: str, n: int, dtype) -> str:
+    """``;resolved=<m>`` derived-column suffix for a method="auto" row."""
+    return f";resolved={resolve_method(op, n, dtype)}"
 
 
 def fig3_single_scan(lens):
@@ -168,7 +177,9 @@ def fig10_compress(lens):
         rng = np.random.default_rng(2)
         x = jnp.asarray(rng.standard_normal(n), jnp.float32)
         m = jnp.asarray(rng.random(n) < 0.5)
-        ours = jax.jit(lambda a, f: compress(a, f)[0])
+        # pinned: this section reproduces the paper's matmul-scan operator,
+        # independent of what the tuning table would pick at this length
+        ours = jax.jit(lambda a, f: compress(a, f, method="matmul")[0])
         base2 = jax.jit(lambda a, f: a[jnp.nonzero(f, size=n)[0]])
         t_ours = timeit(ours, x, m)
         t_nz = timeit(base2, x, m)
@@ -185,7 +196,8 @@ def fig11_radix_sort(lens):
     """
     for n in lens:
         x = jnp.asarray(np.random.default_rng(3).standard_normal(n), jnp.float16)
-        t_ours = timeit(jax.jit(lambda a: radix_sort(a, bits_per_pass=1)[0]), x)
+        t_ours = timeit(jax.jit(lambda a: radix_sort(
+            a, method="matmul", bits_per_pass=1)[0]), x)
         t_base = timeit(jax.jit(lambda a: jnp.sort(a)), x)
         row(f"fig11/radix_sort/n={n}", t_ours,
             f"baseline_us={t_base * 1e6:.1f};ratio={t_base / t_ours:.2f}x")
@@ -217,10 +229,10 @@ def fig13_top_p(quick=True):
             np.random.default_rng(5).standard_normal((batch, vocab)) * 3,
             jnp.float32)
         key = jax.random.PRNGKey(0)
-        ours = jax.jit(lambda l, k: top_p_sample(l, k, p=0.9,
+        ours = jax.jit(lambda l, k: top_p_sample(l, k, p=0.9, method="matmul",
                                                  sort_method="radix",
                                                  bits_per_pass=1))
-        base = jax.jit(lambda l, k: top_p_sample(l, k, p=0.9,
+        base = jax.jit(lambda l, k: top_p_sample(l, k, p=0.9, method="matmul",
                                                  sort_method="xla"))
         t_ours = timeit(ours, logits, key, repeats=3, warmup=1)
         t_base = timeit(base, logits, key, repeats=3, warmup=1)
@@ -246,7 +258,7 @@ def scan_pipeline_sweep(lens, smoke=False):
     """
     dts = {"float32": jnp.float32} if smoke else \
         {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "int8": jnp.int8}
-    methods = ("vector", "matmul", "kernel", "blocked")
+    methods = ("vector", "matmul", "kernel", "blocked", "auto")
     s = 32 if smoke else 128
     for dt_name, dt in dts.items():
         for n in lens:
@@ -265,8 +277,10 @@ def scan_pipeline_sweep(lens, smoke=False):
                 fn = jax.jit(functools.partial(scan, method=m, tile_s=s))
                 t = timeit(fn, x, repeats=3, warmup=1)
                 bw = nbytes / t
+                extra = _resolved("scan", n, dt) if m == "auto" else ""
                 row(f"scan_pipeline/{m}/{dt_name}/n={n}", t,
-                    f"GB/s={bw / 1e9:.2f};memcpy_frac={bw / copy_bw:.3f}")
+                    f"GB/s={bw / 1e9:.2f};memcpy_frac={bw / copy_bw:.3f}"
+                    f"{extra}")
 
 
 # ---------------------------------------------------------------------------
@@ -341,7 +355,7 @@ def sort_sweep(lens):
     same row.  The trace-only pass-count guard runs first.
     """
     sort_pass_count_guard()
-    methods = ("vector", "matmul", "kernel")
+    methods = ("vector", "matmul", "kernel", "auto")
     for dt_name, (bits, key_bytes) in _SORT_DTYPES.items():
         for n in lens:
             x = _op_payload(dt_name, n, seed=6)
@@ -354,10 +368,12 @@ def sort_sweep(lens):
                         a, method=m, bits_per_pass=k)[0])
                     t = timeit(fn, x, repeats=3, warmup=1)
                     base = base or t
+                    extra = _resolved("radix_sort", n, dt_name) \
+                        if m == "auto" else ""
                     row(f"sort/{dt_name}/n={n}/{m}/k={k}", t,
                         f"passes={passes};bytes_moved={bytes_moved};"
                         f"GB/s={bytes_moved / t / 1e9:.2f};"
-                        f"speedup_vs_k1={base / t:.2f}x")
+                        f"speedup_vs_k1={base / t:.2f}x{extra}")
 
 
 # ---------------------------------------------------------------------------
@@ -375,7 +391,7 @@ def segscan_sweep(smoke=False):
     would read/write, i.e. the traffic the packed layout avoids.
     """
     from repro.core.segmented import segment_scan
-    methods = ("vector", "matmul", "kernel", "blocked")
+    methods = ("vector", "matmul", "kernel", "blocked", "auto")
     s = 16 if smoke else 128
     grid = ((4, 128), (16, 256)) if smoke else \
         ((8, 512), (64, 1024), (512, 2048))
@@ -393,10 +409,12 @@ def segscan_sweep(smoke=False):
                                                         tile_s=s))
             t = timeit(fn, x, offsets, repeats=3, warmup=1)
             base = base or t
+            extra = _resolved("segment_scan", n, jnp.float32) \
+                if m == "auto" else ""
             row(f"segscan/{m}/S={num_segs}/L={mean_len}", t,
                 f"n={n};GB/s={8 * n / t / 1e9:.2f};"
                 f"pad_waste={pad_waste:.2f};"
-                f"speedup_vs_vector={base / t:.2f}x")
+                f"speedup_vs_vector={base / t:.2f}x{extra}")
 
 
 # ---------------------------------------------------------------------------
@@ -414,7 +432,7 @@ def linrec_sweep(smoke=False):
     speedup over the affine-pair ``associative_scan`` vector baseline.
     """
     from repro.core.linrec import linear_scan, linrec_accum_dtype_for
-    methods = ("vector", "matmul", "kernel", "blocked")
+    methods = ("vector", "matmul", "kernel", "blocked", "auto")
     dts = {"float32": jnp.float32} if smoke else \
         {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
     s = 16 if smoke else 128
@@ -436,9 +454,11 @@ def linrec_sweep(smoke=False):
                                                            tile_s=s))
                 t = timeit(fn, a, b, repeats=3, warmup=1)
                 base = base or t
+                extra = _resolved("linear_scan", length, dt) \
+                    if m == "auto" else ""
                 row(f"linrec/{m}/{dt_name}/S={num_rows}/L={length}", t,
                     f"n={n};GB/s={nbytes / t / 1e9:.2f};"
-                    f"speedup_vs_vector={base / t:.2f}x")
+                    f"speedup_vs_vector={base / t:.2f}x{extra}")
 
 
 # ---------------------------------------------------------------------------
@@ -466,8 +486,9 @@ def ops_split(n: int):
             fn = jax.jit(lambda a, fl, m=m: split(a, fl, method=m)[0])
             t = timeit(fn, x, f, repeats=3, warmup=1)
             base = base or t
+            extra = _resolved("split", n, dt) if m == "auto" else ""
             row(f"ops/split/{dt}/n={n}/{m}", t,
-                f"speedup_vs_vector={base / t:.2f}x")
+                f"speedup_vs_vector={base / t:.2f}x{extra}")
 
 
 def ops_sort(n: int, dtypes=("bfloat16", "float32")):
@@ -480,8 +501,9 @@ def ops_sort(n: int, dtypes=("bfloat16", "float32")):
             fn = jax.jit(lambda a, m=m: radix_sort(a, method=m)[0])
             t = timeit(fn, x, repeats=3, warmup=1)
             base = base or t
+            extra = _resolved("radix_sort", n, dt) if m == "auto" else ""
             row(f"ops/sort/{dt}/n={n}/{m}", t,
-                f"bits={bits};speedup_vs_vector={base / t:.2f}x")
+                f"bits={bits};speedup_vs_vector={base / t:.2f}x{extra}")
 
 
 def ops_top_p(vocab: int, batch: int = 4):
@@ -495,8 +517,10 @@ def ops_top_p(vocab: int, batch: int = 4):
         fn = jax.jit(lambda l, k, m=m: top_p_sample(l, k, p=0.9, method=m))
         t = timeit(fn, logits, key, repeats=3, warmup=1)
         base = base or t
+        extra = _resolved("top_p_sample", vocab, jnp.float32) \
+            if m == "auto" else ""
         row(f"ops/top_p/b={batch}/v={vocab}/{m}", t,
-            f"speedup_vs_vector={base / t:.2f}x")
+            f"speedup_vs_vector={base / t:.2f}x{extra}")
 
 
 def ops_operators(smoke: bool):

@@ -11,9 +11,12 @@ from repro.kernels import scan_kernel
 
 # 1) prefix sum on the MXU: scan(z) = A@U + L^-@A@1  (paper Eq. 1)
 x = jnp.asarray(np.random.default_rng(0).standard_normal(100_000), jnp.float32)
+y_auto = scan(x)                            # method="auto": the committed
+                                            # tuning table picks the path
 y_mm = scan(x, method="matmul", variant="scanul1", tile_s=128)
 y_vec = scan(x, method="vector")            # the vector-unit baseline
 print("matmul scan == cumsum:", bool(jnp.allclose(y_mm, y_vec, atol=1e-2)))
+print("auto scan == cumsum:  ", bool(jnp.allclose(y_auto, y_vec, atol=1e-2)))
 
 # 2) int8 mask scan (the cube unit's int8->int32 path)
 mask = jnp.asarray(np.random.default_rng(1).random(10_000) < 0.3, jnp.int8)

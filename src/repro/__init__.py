@@ -1,0 +1,7 @@
+"""JAX/Pallas reproduction of "Parallel Scan on Ascend AI Accelerators".
+
+A real (non-namespace) package so wheel installs ship every subpackage plus
+the ``configs/tuning/*.json`` package data that ``method="auto"`` dispatch
+loads via ``importlib.resources``.
+"""
+__version__ = "0.1.0"

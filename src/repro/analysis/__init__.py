@@ -1,0 +1,1 @@
+"""Analysis — roofline/report/collectives tooling over BENCH output."""

@@ -1,0 +1,1 @@
+"""Model configs (dataclasses) and the tuning-table package data."""

@@ -85,7 +85,7 @@ class ModelConfig:
     dtype: str = "bfloat16"
     remat: bool = True
     scan_layers: bool = True
-    scan_method: str = "matmul"     # the paper's technique toggle ("vector" baseline)
+    scan_method: str = "auto"       # tuning-table dispatch ("vector"/"matmul" to pin)
     # shapes this arch supports (skips documented in DESIGN.md §4)
     supports_long: bool = False
 

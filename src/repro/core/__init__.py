@@ -1,4 +1,7 @@
 """Core — the paper's contribution: matmul-based parallel scan + scan-based operators."""
+from repro.core.autotune import (
+    resolve_method, maybe_resolve, method_override, AutotuneFallbackWarning,
+)
 from repro.core.scan import (
     scan, cumsum, tile_scan_scanu, tile_scan_scanul1, upper_ones,
     strictly_lower_ones, accum_dtype_for,

@@ -54,6 +54,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.autotune import maybe_resolve
 from repro.core.primitives import _register, dispatch
 from repro.core.scan import METHODS, accum_dtype_for
 
@@ -336,7 +337,7 @@ def linear_scan(
     axis: int = -1,
     exclusive: bool = False,
     reverse: bool = False,
-    method: str = "matmul",
+    method: str = "auto",
     initial=None,
     tile_s: int = 128,
     block_tiles: int = 8,
@@ -360,7 +361,9 @@ def linear_scan(
             ``out[t] = y_{t-1}`` with ``out[0] = initial`` (or 0).  Note the
             shift does not apply ``a_t``.
         reverse: Scan from the end (``y_t = a_t * y_{t+1} + b_t``).
-        method: One of ``METHODS`` (see module docstring for what runs).
+        method: ``"auto"`` (default; resolved from the committed tuning table
+            by :mod:`repro.core.autotune`) or one of ``METHODS`` (see module
+            docstring for what runs).
         initial: Optional starting state ``y_{-1}`` (scalar or array
             broadcastable to ``a``/``b`` minus the scan axis).  Folded into
             the first step exactly (``b_0 + a_0 * initial``).  Length-1 scans
@@ -391,8 +394,9 @@ def linear_scan(
         >>> [float(v) for v in linear_scan(a, b, exclusive=True, initial=7.0)]
         [7.0, 8.0, 17.0, 5.0]
     """
-    if method not in METHODS:
-        raise ValueError(f"unknown scan method {method!r}; expected one of {METHODS}")
+    if method != "auto" and method not in METHODS:
+        raise ValueError(f"unknown scan method {method!r}; expected one of "
+                         f"{METHODS + ('auto',)}")
     if not 2 <= tile_s <= MAX_TILE:
         raise ValueError(
             f"tile_s must be in [2, {MAX_TILE}] (the exponent-normalized "
@@ -418,6 +422,8 @@ def linear_scan(
         a = jnp.broadcast_to(a, a.shape[:-1] + (n,))
     if b.shape[-1] != n:
         b = jnp.broadcast_to(b, b.shape[:-1] + (n,))
+    method = maybe_resolve(method, "linear_scan", n,
+                           jnp.result_type(a.dtype, b.dtype))
     full = jnp.broadcast_shapes(a.shape, b.shape)
     # b is output-sized anyway — materialize it (keeps the custom-VJP
     # cotangent shapes trivial); a stays unbroadcast for the shared-W saving.
@@ -480,7 +486,7 @@ def cumprod(x: jax.Array, axis: int = -1, **kw) -> jax.Array:
     return linear_scan(x, jnp.zeros_like(x), axis=axis, **kw)
 
 
-def cummax(x: jax.Array, axis: int = -1, *, method: str = "matmul",
+def cummax(x: jax.Array, axis: int = -1, *, method: str = "auto",
            reverse: bool = False, tile_s: int = 128,
            block_tiles: int = 8) -> jax.Array:
     """Cumulative maximum along ``axis`` under the same ``method=`` contract.
@@ -518,8 +524,11 @@ def cummax(x: jax.Array, axis: int = -1, *, method: str = "matmul",
         >>> cummax(jnp.asarray([1, 3, 2, 5, 4], jnp.int32)).tolist()
         [1, 3, 3, 5, 5]
     """
-    if method not in METHODS:
-        raise ValueError(f"unknown scan method {method!r}; expected one of {METHODS}")
+    if method != "auto" and method not in METHODS:
+        raise ValueError(f"unknown scan method {method!r}; expected one of "
+                         f"{METHODS + ('auto',)}")
+    if x.ndim:
+        method = maybe_resolve(method, "cummax", x.shape[axis % x.ndim], x.dtype)
     if x.dtype == jnp.bool_:  # lax.cummax rejects bool; max == prefix-any
         out = cummax(x.astype(jnp.int8), axis=axis, method=method,
                      reverse=reverse, tile_s=tile_s)

@@ -21,6 +21,13 @@ instead of 32 — every (method, bits_per_pass) combination stays bit-identical
 to ``method="vector"`` with ``bits_per_pass=1`` because bucket offsets remain
 exact int8 -> int32 mask scans.
 
+Every operator defaults to ``method="auto"``: the concrete method is resolved
+per (op, length, dtype, backend) from the committed tuning table
+(:mod:`repro.core.autotune`) before dispatch, in Python on static shapes — so
+an ``"auto"`` call traces to a jaxpr identical to passing the resolved method
+explicitly, and nested calls (e.g. the ``multi_split`` passes inside
+``radix_sort``) always receive the one concrete method the entry point chose.
+
 Shapes are static (JAX): operators that logically return a variable number of
 elements (compress/split) return a full-size array plus a count, with the tail
 filled.
@@ -32,6 +39,7 @@ from typing import Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.autotune import maybe_resolve
 from repro.core.scan import METHODS, scan
 
 __all__ = [
@@ -180,7 +188,7 @@ def _split_fused(x, flags, *, method, tile_s, interpret):
     return _kops.split_kernel(x, flags, s=tile_s, interpret=interpret)
 
 
-def split(x: jax.Array, flags: jax.Array, *, method: str = "matmul",
+def split(x: jax.Array, flags: jax.Array, *, method: str = "auto",
           return_indices: bool = True, tile_s: int = 128,
           interpret: Optional[bool] = None):
     """Stable partition (the paper's SplitInd): flagged elements first, order kept.
@@ -212,6 +220,7 @@ def split(x: jax.Array, flags: jax.Array, *, method: str = "matmul",
         >>> z.tolist(), ind.tolist(), int(k)
         ([20, 40, 10, 30], [1, 3, 0, 2], 2)
     """
+    method = maybe_resolve(method, "split", x.shape[-1], x.dtype)
     z, ind, n_true = dispatch("split", method)(
         x, flags, method=method, tile_s=tile_s, interpret=interpret)
     if return_indices:
@@ -219,7 +228,7 @@ def split(x: jax.Array, flags: jax.Array, *, method: str = "matmul",
     return z, n_true
 
 
-def compress(x: jax.Array, mask: jax.Array, *, method: str = "matmul",
+def compress(x: jax.Array, mask: jax.Array, *, method: str = "auto",
              fill_value=0, tile_s: int = 128,
              interpret: Optional[bool] = None) -> Tuple[jax.Array, jax.Array]:
     """Masked select: gather elements where ``mask`` is true, packed left.
@@ -243,6 +252,7 @@ def compress(x: jax.Array, mask: jax.Array, *, method: str = "matmul",
         >>> v.tolist(), int(k)
         ([1, 3, 0, 0], 2)
     """
+    method = maybe_resolve(method, "compress", x.shape[-1], x.dtype)
     z, _, n_true = split(x, mask, method=method, tile_s=tile_s,
                          interpret=interpret)
     iota = jnp.arange(x.shape[-1], dtype=jnp.int32)
@@ -304,7 +314,7 @@ def _multi_split_fused(x, digits, num_buckets, *, method, tile_s, interpret):
 
 
 def multi_split(x: jax.Array, digits: jax.Array, num_buckets: int, *,
-                method: str = "matmul", return_indices: bool = True,
+                method: str = "auto", return_indices: bool = True,
                 tile_s: int = 128, interpret: Optional[bool] = None):
     """Stable ``num_buckets``-way partition — radix-2^k SplitInd.
 
@@ -343,6 +353,7 @@ def multi_split(x: jax.Array, digits: jax.Array, num_buckets: int, *,
     """
     if num_buckets < 1:
         raise ValueError(f"num_buckets must be >= 1, got {num_buckets}")
+    method = maybe_resolve(method, "multi_split", x.shape[-1], x.dtype)
     z, ind, counts = dispatch("multi_split", method)(
         x, digits, num_buckets, method=method, tile_s=tile_s,
         interpret=interpret)
@@ -480,7 +491,7 @@ def _radix_passes_fused(enc, bits, *, method, tile_s, interpret,
                                        interpret=interpret)
 
 
-def radix_sort(x: jax.Array, *, descending: bool = False, method: str = "matmul",
+def radix_sort(x: jax.Array, *, descending: bool = False, method: str = "auto",
                return_indices: bool = True, tile_s: int = 128,
                bits_per_pass: int = 4, interpret: Optional[bool] = None):
     """Stable LSB radix sort built on scan-based multi-way splits (paper §5).
@@ -536,6 +547,7 @@ def radix_sort(x: jax.Array, *, descending: bool = False, method: str = "matmul"
     if not 1 <= bits_per_pass <= 8:
         raise ValueError(
             f"bits_per_pass must be in [1, 8], got {bits_per_pass}")
+    method = maybe_resolve(method, "radix_sort", x.shape[-1], x.dtype)
     enc, bits, decode = _encode_for_sort(x)
     if descending:
         enc = ~enc  # complement keeps stability while reversing the order
@@ -550,7 +562,7 @@ def radix_sort(x: jax.Array, *, descending: bool = False, method: str = "matmul"
     return values
 
 
-def sort(x: jax.Array, *, descending: bool = False, method: str = "matmul",
+def sort(x: jax.Array, *, descending: bool = False, method: str = "auto",
          tile_s: int = 128, bits_per_pass: int = 4,
          interpret: Optional[bool] = None):
     """PyTorch-style ``sort`` returning ``(values, indices)``; radix under the hood.
@@ -582,7 +594,7 @@ def sort(x: jax.Array, *, descending: bool = False, method: str = "matmul",
 # ---------------------------------------------------------------------------
 
 
-def topk(x: jax.Array, k: int, *, method: str = "matmul", tile_s: int = 128,
+def topk(x: jax.Array, k: int, *, method: str = "auto", tile_s: int = 128,
          bits_per_pass: int = 4, interpret: Optional[bool] = None):
     """Top-k via descending radix sort (paper §5 implements it over SplitInd).
 
@@ -608,7 +620,7 @@ def topk(x: jax.Array, k: int, *, method: str = "matmul", tile_s: int = 128,
     return values[..., :k], idx[..., :k]
 
 
-def weighted_sample(w: jax.Array, key: jax.Array, *, method: str = "matmul",
+def weighted_sample(w: jax.Array, key: jax.Array, *, method: str = "auto",
                     cdf: Optional[jax.Array] = None, tile_s: int = 128,
                     u: Optional[jax.Array] = None) -> jax.Array:
     """Inverse-transform sampling on the scanned CDF (paper §5).
@@ -638,6 +650,7 @@ def weighted_sample(w: jax.Array, key: jax.Array, *, method: str = "matmul",
         ...                     u=jnp.asarray([0.75])))
         1
     """
+    method = maybe_resolve(method, "weighted_sample", w.shape[-1], w.dtype)
     if cdf is None:
         cdf = scan(w, axis=-1, method=method, tile_s=tile_s)
     total = cdf[..., -1:]
@@ -669,7 +682,7 @@ def _top_p_tail_fused(sorted_p, key, *, p, method, tile_s, interpret, u=None):
 
 
 def top_p_sample(logits: jax.Array, key: jax.Array, p: float = 0.9,
-                 temperature: float = 1.0, *, method: str = "matmul",
+                 temperature: float = 1.0, *, method: str = "auto",
                  sort_method: str = "radix", tile_s: int = 128,
                  bits_per_pass: int = 4, u: Optional[jax.Array] = None,
                  interpret: Optional[bool] = None) -> jax.Array:
@@ -710,6 +723,8 @@ def top_p_sample(logits: jax.Array, key: jax.Array, p: float = 0.9,
         >>> int(top_p_sample(logits, jax.random.PRNGKey(1), p=0.9)[0])
         1
     """
+    method = maybe_resolve(method, "top_p_sample", logits.shape[-1],
+                           logits.dtype)
     if temperature != 1.0:
         logits = logits / temperature
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)

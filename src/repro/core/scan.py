@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.autotune import maybe_resolve
+
 __all__ = [
     "scan",
     "cumsum",
@@ -260,7 +262,7 @@ def scan(
     *,
     exclusive: bool = False,
     reverse: bool = False,
-    method: str = "matmul",
+    method: str = "auto",
     variant: str = "scanul1",
     tile_s: int = 128,
     block_tiles: int = 8,
@@ -280,11 +282,14 @@ def scan(
             axes are moved there and back).
         exclusive: If true, shift the result right by one with a leading zero.
         reverse: If true, scan from the end (suffix sums).
-        method: Execution strategy, one of ``METHODS``:
+        method: Execution strategy — ``"auto"`` (the default) resolves to one
+            of ``METHODS`` per (op, length, dtype, backend) from the committed
+            tuning table (:mod:`repro.core.autotune`; resolution is static, so
+            the traced jaxpr is identical to passing the resolved method), or
+            one of ``METHODS`` explicitly:
 
             * ``"matmul"`` — the paper's cube-unit algorithms (ScanU / ScanUL1
               per ``variant``) as XLA matmuls with SSA multi-level blocking.
-              The default.
             * ``"vector"`` — plain ``jnp.cumsum`` (the paper's vector-only
               baseline).
             * ``"kernel"`` — the fused sequential-grid Pallas kernel
@@ -318,13 +323,15 @@ def scan(
         >>> [int(v) for v in scan(jnp.arange(1, 5, dtype=jnp.int32), exclusive=True)]
         [0, 1, 3, 6]
     """
-    if method not in METHODS:
-        raise ValueError(f"unknown scan method {method!r}; expected one of {METHODS}")
+    if method != "auto" and method not in METHODS:
+        raise ValueError(f"unknown scan method {method!r}; expected one of "
+                         f"{METHODS + ('auto',)}")
     if variant not in _TILE_FNS:
         raise ValueError(f"unknown scan variant {variant!r}")
     acc = jnp.dtype(accum_dtype) if accum_dtype is not None else accum_dtype_for(x.dtype)
 
     axis = axis % x.ndim
+    method = maybe_resolve(method, "scan", x.shape[axis], x.dtype)
     if axis != x.ndim - 1:
         x = jnp.moveaxis(x, axis, -1)
     if reverse:

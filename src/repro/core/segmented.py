@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.autotune import maybe_resolve
 from repro.core.linrec import linear_scan, linrec_accum_dtype_for
 from repro.core.primitives import _encode_for_sort, _register, dispatch
 from repro.core.scan import accum_dtype_for, scan
@@ -280,7 +281,7 @@ def _segment_scan_blocked(values, offsets, *, method, tile_s, block_tiles,
 
 
 def segment_scan(values, offsets=None, *, exclusive: bool = False,
-                 reverse: bool = False, method: str = "matmul",
+                 reverse: bool = False, method: str = "auto",
                  tile_s: int = 128, block_tiles: int = 8,
                  accum_dtype=None) -> jax.Array:
     """Per-segment prefix sum of a packed batch — the carry resets at boundaries.
@@ -317,6 +318,7 @@ def segment_scan(values, offsets=None, *, exclusive: bool = False,
     """
     values, offsets = _unwrap(values, offsets)
     n = values.shape[-1]
+    method = maybe_resolve(method, "segment_scan", n, values.dtype)
     acc = jnp.dtype(accum_dtype) if accum_dtype is not None \
         else accum_dtype_for(values.dtype)
     if n == 0:
@@ -359,7 +361,7 @@ def segment_cumsum(values, offsets=None, **kw) -> jax.Array:
 
 
 def segment_linear_scan(a, b, offsets=None, *, exclusive: bool = False,
-                        reverse: bool = False, method: str = "matmul",
+                        reverse: bool = False, method: str = "auto",
                         initial=0.0, tile_s: int = 128, block_tiles: int = 8,
                         accum_dtype=None) -> jax.Array:
     """Per-segment linear recurrence ``y_t = a_t * y_{t-1} + b_t`` of a packed batch.
@@ -411,6 +413,8 @@ def segment_linear_scan(a, b, offsets=None, *, exclusive: bool = False,
     a = jnp.broadcast_to(a, shp)
     b = jnp.broadcast_to(b, shp)
     n = a.shape[-1]
+    method = maybe_resolve(method, "segment_linear_scan", n,
+                           jnp.result_type(a.dtype, b.dtype))
     acc = jnp.dtype(accum_dtype) if accum_dtype is not None \
         else linrec_accum_dtype_for(jnp.result_type(a.dtype, b.dtype))
     if n == 0:
@@ -439,7 +443,7 @@ def segment_linear_scan(a, b, offsets=None, *, exclusive: bool = False,
     return out
 
 
-def segment_sums(values, offsets=None, *, method: str = "matmul",
+def segment_sums(values, offsets=None, *, method: str = "auto",
                  tile_s: int = 128, block_tiles: int = 8,
                  accum_dtype=None) -> jax.Array:
     """Per-segment totals, read off the inclusive segmented scan's last element.
@@ -492,7 +496,7 @@ def _segment_compress_impl(values, mask, offsets, *, method, fill_value,
     return z, counts
 
 
-def segment_compress(values, mask, offsets=None, *, method: str = "matmul",
+def segment_compress(values, mask, offsets=None, *, method: str = "auto",
                      fill_value=0, tile_s: int = 128,
                      block_tiles: int = 8) -> Tuple[jax.Array, jax.Array]:
     """Per-segment masked select: within each segment, kept elements pack left.
@@ -525,6 +529,8 @@ def segment_compress(values, mask, offsets=None, *, method: str = "matmul",
         ([2, 0, 3, 5, 0], [1, 2])
     """
     values, offsets = _unwrap(values, offsets)
+    method = maybe_resolve(method, "segment_compress", values.shape[-1],
+                           values.dtype)
     return dispatch("segment_compress", method)(
         values, mask, offsets, method=method, fill_value=fill_value,
         tile_s=tile_s, block_tiles=block_tiles)
@@ -559,7 +565,7 @@ def _segment_multi_split_dest(digits, num_buckets, offsets, ids, seg_start, *,
 
 
 def segment_sort(values, offsets=None, *, descending: bool = False,
-                 method: str = "matmul", bits_per_pass: int = 4,
+                 method: str = "auto", bits_per_pass: int = 4,
                  return_indices: bool = True, tile_s: int = 128,
                  block_tiles: int = 8):
     """Stable per-segment radix sort of a packed batch — one pass set for all.
@@ -604,6 +610,7 @@ def segment_sort(values, offsets=None, *, descending: bool = False,
     if values.ndim != 1:
         raise ValueError("segment_sort expects 1-D packed values")
     n = values.shape[-1]
+    method = maybe_resolve(method, "segment_sort", n, values.dtype)
     enc, bits, decode = _encode_for_sort(values)
     if descending:
         enc = ~enc
@@ -627,7 +634,7 @@ def segment_sort(values, offsets=None, *, descending: bool = False,
     return sorted_values
 
 
-def segment_topk(values, offsets=None, k: int = 1, *, method: str = "matmul",
+def segment_topk(values, offsets=None, k: int = 1, *, method: str = "auto",
                  bits_per_pass: int = 4, fill_value=0, tile_s: int = 128,
                  block_tiles: int = 8):
     """Per-segment top-k of a packed batch via one descending segmented sort.
@@ -684,7 +691,7 @@ def segment_topk(values, offsets=None, k: int = 1, *, method: str = "matmul",
 # ---------------------------------------------------------------------------
 
 
-def segment_softmax(values, offsets=None, *, method: str = "matmul",
+def segment_softmax(values, offsets=None, *, method: str = "auto",
                     tile_s: int = 128, block_tiles: int = 8) -> jax.Array:
     """Per-segment softmax of packed logits, in fp32.
 
@@ -722,7 +729,7 @@ def segment_softmax(values, offsets=None, *, method: str = "matmul",
 
 
 def segment_top_p_sample(values, offsets=None, key=None, p: float = 0.9,
-                         temperature: float = 1.0, *, method: str = "matmul",
+                         temperature: float = 1.0, *, method: str = "auto",
                          bits_per_pass: int = 4, is_probs: bool = False,
                          u: Optional[jax.Array] = None, tile_s: int = 128,
                          block_tiles: int = 8) -> jax.Array:
@@ -771,6 +778,7 @@ def segment_top_p_sample(values, offsets=None, key=None, p: float = 0.9,
     num_segments = offsets.shape[0] - 1
     if n == 0:  # all segments empty: the documented 0-per-segment result
         return jnp.zeros((num_segments,), jnp.int32)
+    method = maybe_resolve(method, "segment_top_p_sample", n, values.dtype)
     kw = dict(method=method, tile_s=tile_s, block_tiles=block_tiles)
     if is_probs:
         probs = values.astype(jnp.float32)

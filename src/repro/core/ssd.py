@@ -51,7 +51,7 @@ def ssd_scan(
     c_mat: jax.Array,    # (B, S, H, N)
     *,
     chunk: int = 128,
-    scan_method: str = "matmul",
+    scan_method: str = "auto",
     initial_state: Optional[jax.Array] = None,   # (B, H, N, P)
     return_final_state: bool = False,
 ):
@@ -158,7 +158,7 @@ def ssd_scan_ref(x, a_log, b_mat, c_mat, *, initial_state=None,
 
 def mlstm_chunked(q: jax.Array, k: jax.Array, v: jax.Array,
                   i_pre: jax.Array, f_pre: jax.Array, *,
-                  chunk: int = 128, scan_method: str = "matmul") -> jax.Array:
+                  chunk: int = 128, scan_method: str = "auto") -> jax.Array:
     """q,k,v: (B,S,H,D); i_pre,f_pre: (B,S,H).  Returns (B,S,H,D)."""
     d = q.shape[-1]
     f_log = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))

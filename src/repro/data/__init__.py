@@ -1,0 +1,1 @@
+"""Data pipeline — packed ragged batches for the segmented subsystem."""

@@ -1,0 +1,1 @@
+"""Launch helpers — dry-run sharding/topology planning."""

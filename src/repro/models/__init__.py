@@ -1,0 +1,1 @@
+"""Model zoo — transformer/mamba/xlstm blocks built on the scan core."""

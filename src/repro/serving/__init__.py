@@ -1,0 +1,1 @@
+"""Serving — ServeEngine decode loop with scan-based top-p sampling."""

@@ -24,8 +24,8 @@ from repro.utils.sharding import use_mesh
 
 
 class ServeEngine:
-    SAMPLERS = ("greedy", "topp_scan", "topp_kernel", "topp_blocked",
-                "topp_segmented", "topp_xla")
+    SAMPLERS = ("greedy", "topp_auto", "topp_scan", "topp_kernel",
+                "topp_blocked", "topp_segmented", "topp_xla")
 
     def __init__(self, cfg, params, *, mesh=None, max_len: int = 512,
                  top_p: float = 0.9, temperature: float = 1.0,
@@ -38,9 +38,9 @@ class ServeEngine:
             raise ValueError(
                 f"bits_per_pass must be in [1, 8], got {bits_per_pass}")
         if scan_method is not None:
-            if scan_method not in METHODS:
+            if scan_method != "auto" and scan_method not in METHODS:
                 raise ValueError(f"unknown scan_method {scan_method!r}; "
-                                 f"expected one of {METHODS}")
+                                 f"expected one of {METHODS + ('auto',)}")
             cfg = dataclasses.replace(cfg, scan_method=scan_method)
         self.cfg = cfg
         self.params = params
@@ -58,11 +58,11 @@ class ServeEngine:
 
     # ---- sampling (the paper's operator) ----
     def _sample(self, logits, key):
-        """samplers: greedy | topp_scan (matmul scans) | topp_kernel (fused
-        Pallas radix passes + one-launch sampling tail) | topp_blocked (scans
-        on the §4 blocked pipeline) | topp_segmented (rows packed as segments
-        of one array, sampled by the segmented subsystem) | topp_xla
-        (baseline)."""
+        """samplers: greedy | topp_auto (method from the tuning table) |
+        topp_scan (matmul scans) | topp_kernel (fused Pallas radix passes +
+        one-launch sampling tail) | topp_blocked (scans on the §4 blocked
+        pipeline) | topp_segmented (rows packed as segments of one array,
+        sampled by the segmented subsystem) | topp_xla (baseline)."""
         if self.sampler == "greedy":
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
         if self.sampler == "topp_segmented":
@@ -72,8 +72,8 @@ class ServeEngine:
                 logits.reshape(b * v), offsets, key, p=self.top_p,
                 temperature=self.temperature,
                 bits_per_pass=self.bits_per_pass).astype(jnp.int32)
-        method = {"topp_kernel": "kernel", "topp_blocked": "blocked"}.get(
-            self.sampler, "matmul")
+        method = {"topp_kernel": "kernel", "topp_blocked": "blocked",
+                  "topp_auto": "auto"}.get(self.sampler, "matmul")
         sort_method = "xla" if self.sampler == "topp_xla" else "radix"
         return top_p_sample(logits, key, p=self.top_p,
                             temperature=self.temperature, method=method,

@@ -1,0 +1,1 @@
+"""Training — loss/optimizer loops exercising the scan operators."""

@@ -1,0 +1,1 @@
+"""Utilities — sharding/mesh compat shims."""

@@ -1,0 +1,295 @@
+"""Autotune: table resolution, the documented fallback chain, and parity.
+
+The contract under test (docs/architecture.md dispatch rule 8):
+
+* ``method="auto"`` resolves pre-trace from the committed tuning table, so
+  the traced jaxpr is *identical* to passing the resolved method explicitly;
+* the fallback chain — override context > ``REPRO_SCAN_METHOD`` env > table
+  bucket (largest breakpoint <= n, nearest bucket below the smallest) >
+  dtype-nearest (silent) > backend/op/table fallbacks (warn once, degrade to
+  ``"vector"``) — in that order;
+* ``build_table`` is deterministic in its input rows (the CI drift gate).
+"""
+import json
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import autotune
+from repro.core.autotune import (
+    AUTO, AutotuneFallbackWarning, CONCRETE_METHODS, ENV_VAR, TUNED_OPS,
+    build_table, load_table, maybe_resolve, method_override, parse_bench_rows,
+    resolve_method, validate_table,
+)
+from repro.core.linrec import linear_scan
+from repro.core.primitives import radix_sort, top_p_sample
+from repro.core.scan import scan
+from repro.core.segmented import segment_scan
+
+# a tiny synthetic table exercising buckets, dtypes and fallbacks
+TEST_TABLE = {
+    "schema_version": 1,
+    "provenance": {},
+    "default_backend": "cpu",
+    "backends": {
+        "cpu": {
+            "scan": {
+                "float32": [[1024, "vector"], [8192, "matmul"]],
+                "int8": [[1024, "kernel"]],
+            },
+            "sort": {"float32": [[512, "blocked"]]},
+        },
+    },
+    "fallbacks": {"linear_scan": "matmul"},
+}
+
+
+@pytest.fixture(autouse=True)
+def _fresh_state(monkeypatch):
+    """Each test gets cleared warn-once state, no env override, a real table."""
+    monkeypatch.delenv(ENV_VAR, raising=False)
+    autotune._reset_for_testing()
+    yield
+    autotune._reset_for_testing()
+
+
+def use_table(table):
+    autotune._reset_for_testing(table)
+
+
+# ---------------------------------------------------------------------------
+# table lookup
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_lookup_largest_breakpoint_leq_n():
+    use_table(TEST_TABLE)
+    r = lambda n: resolve_method("scan", n, "float32", backend="cpu")
+    assert r(1024) == "vector"
+    assert r(8191) == "vector"
+    assert r(8192) == "matmul"
+    assert r(1 << 20) == "matmul"
+
+
+def test_nearest_bucket_below_smallest_breakpoint():
+    use_table(TEST_TABLE)
+    # n below the smallest measured length uses the first bucket, not vector
+    assert resolve_method("scan", 4, "float32", backend="cpu") == "vector"
+    assert resolve_method("sort", 1, "float32", backend="cpu") == "blocked"
+
+
+def test_dtype_exact_then_nearest_silent():
+    use_table(TEST_TABLE)
+    assert resolve_method("scan", 2048, "int8", backend="cpu") == "kernel"
+    # bfloat16 is unmeasured -> silently falls to float32 (no warning)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", AutotuneFallbackWarning)
+        assert resolve_method("scan", 2048, "bfloat16", backend="cpu") == "vector"
+
+
+def test_op_alias_collapses_onto_family():
+    use_table(TEST_TABLE)
+    # topk/radix_sort alias onto "sort"; cumsum onto "scan"
+    assert resolve_method("topk", 600, "float32", backend="cpu") == "blocked"
+    assert resolve_method("radix_sort", 600, "float32", backend="cpu") == "blocked"
+    assert resolve_method("cumsum", 8192, "float32", backend="cpu") == "matmul"
+
+
+def test_auto_never_returned():
+    table = load_table()
+    assert table is not None, "committed table must load from package data"
+    for op in TUNED_OPS + tuple(autotune.OP_ALIASES):
+        for n in (1, 512, 4096, 1 << 20):
+            m = resolve_method(op, n, "float32", backend="cpu")
+            assert m in CONCRETE_METHODS, (op, n, m)
+
+
+# ---------------------------------------------------------------------------
+# fallback chain
+# ---------------------------------------------------------------------------
+
+
+def test_missing_op_falls_back_to_explicit_entry_no_warning():
+    use_table(TEST_TABLE)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", AutotuneFallbackWarning)
+        assert resolve_method("linear_scan", 4096, "float32",
+                              backend="cpu") == "matmul"
+
+
+def test_missing_op_without_fallback_warns_once_and_uses_vector():
+    use_table(TEST_TABLE)
+    with pytest.warns(AutotuneFallbackWarning, match="segment_scan"):
+        assert resolve_method("segment_scan", 4096, "float32",
+                              backend="cpu") == "vector"
+    with warnings.catch_warnings():  # second resolution is silent
+        warnings.simplefilter("error", AutotuneFallbackWarning)
+        assert resolve_method("segment_scan", 4096, "float32",
+                              backend="cpu") == "vector"
+
+
+def test_unknown_backend_warns_and_falls_to_default_backend():
+    use_table(TEST_TABLE)
+    with pytest.warns(AutotuneFallbackWarning, match="tpu"):
+        assert resolve_method("scan", 8192, "float32",
+                              backend="tpu") == "matmul"
+
+
+def test_unloadable_table_warns_and_resolves_vector():
+    use_table(None)
+    assert resolve_method("scan", 8192, "float32", backend="cpu") == "vector"
+
+
+def test_env_override_beats_table(monkeypatch):
+    use_table(TEST_TABLE)
+    monkeypatch.setenv(ENV_VAR, "blocked")
+    assert resolve_method("scan", 8192, "float32", backend="cpu") == "blocked"
+    monkeypatch.setenv(ENV_VAR, "auto")  # "auto" defers to the table
+    assert resolve_method("scan", 8192, "float32", backend="cpu") == "matmul"
+    monkeypatch.setenv(ENV_VAR, "nonsense")
+    with pytest.raises(ValueError, match="nonsense"):
+        resolve_method("scan", 8192, "float32", backend="cpu")
+
+
+def test_context_override_beats_env(monkeypatch):
+    use_table(TEST_TABLE)
+    monkeypatch.setenv(ENV_VAR, "blocked")
+    with method_override("kernel"):
+        assert resolve_method("scan", 8192, "float32", backend="cpu") == "kernel"
+    assert resolve_method("scan", 8192, "float32", backend="cpu") == "blocked"
+    with pytest.raises(ValueError):
+        with method_override("nonsense"):
+            pass
+
+
+def test_maybe_resolve_passes_concrete_methods_through():
+    use_table(TEST_TABLE)
+    for m in CONCRETE_METHODS:
+        assert maybe_resolve(m, "scan", 8192, "float32") == m
+    assert maybe_resolve(AUTO, "scan", 8192, "float32",
+                         backend="cpu") == "matmul"
+
+
+# ---------------------------------------------------------------------------
+# jaxpr parity: auto traces identically to the method it resolves to
+# ---------------------------------------------------------------------------
+
+
+def _jaxpr(fn, *args):
+    # object reprs inside jaxpr params carry memory addresses; mask them so
+    # two traces of the same program compare equal
+    import re
+    return re.sub(r"0x[0-9a-f]+", "0x", str(jax.make_jaxpr(fn)(*args)))
+
+
+@pytest.mark.parametrize("n", [64, 2048, 16384])
+def test_scan_auto_jaxpr_identical(n):
+    x = jnp.ones(n, jnp.float32)
+    resolved = resolve_method("scan", n, x.dtype)
+    assert _jaxpr(lambda a: scan(a, method="auto"), x) == \
+        _jaxpr(lambda a: scan(a, method=resolved), x)
+
+
+def test_linrec_auto_jaxpr_identical():
+    a = jnp.full((2, 1024), 0.5, jnp.float32)
+    b = jnp.ones((2, 1024), jnp.float32)
+    resolved = resolve_method("linear_scan", 1024, jnp.float32)
+    assert _jaxpr(lambda u, v: linear_scan(u, v, method="auto"), a, b) == \
+        _jaxpr(lambda u, v: linear_scan(u, v, method=resolved), a, b)
+
+
+def test_segmented_auto_jaxpr_identical():
+    v = jnp.ones(512, jnp.float32)
+    off = jnp.asarray([0, 100, 512], jnp.int32)
+    resolved = resolve_method("segment_scan", 512, jnp.float32)
+    assert _jaxpr(lambda x, o: segment_scan(x, o, method="auto"), v, off) == \
+        _jaxpr(lambda x, o: segment_scan(x, o, method=resolved), v, off)
+
+
+def test_sort_auto_jaxpr_identical():
+    x = jnp.ones(256, jnp.int8)
+    resolved = resolve_method("radix_sort", 256, jnp.int8)
+    assert _jaxpr(lambda a: radix_sort(a, method="auto")[0], x) == \
+        _jaxpr(lambda a: radix_sort(a, method=resolved)[0], x)
+
+
+def test_top_p_auto_jaxpr_identical():
+    logits = jnp.ones((2, 128), jnp.float32)
+    key = jax.random.PRNGKey(0)
+    resolved = resolve_method("top_p_sample", 128, jnp.float32)
+    assert _jaxpr(lambda l, k: top_p_sample(l, k, method="auto"), logits, key) \
+        == _jaxpr(lambda l, k: top_p_sample(l, k, method=resolved), logits, key)
+
+
+def test_auto_bit_parity_with_resolved():
+    # int8 cumsum is exact; auto must be bit-identical to its resolution
+    x = jnp.asarray([3, -1, 7, 0, 2, 5, -4, 1] * 32, jnp.int8)
+    resolved = resolve_method("scan", x.shape[0], x.dtype)
+    assert jnp.array_equal(scan(x, method="auto"), scan(x, method=resolved))
+
+
+def test_env_override_changes_resolution_under_jit(monkeypatch):
+    # resolution is pre-trace: the env var picks the path before jit sees it
+    use_table(TEST_TABLE)
+    x = jnp.ones(8192, jnp.float32)
+    monkeypatch.setenv(ENV_VAR, "vector")
+    j_env = _jaxpr(lambda a: scan(a, method="auto"), x)
+    monkeypatch.delenv(ENV_VAR)
+    assert j_env == _jaxpr(lambda a: scan(a, method="vector"), x)
+
+
+# ---------------------------------------------------------------------------
+# table build/validate (the pieces the CI drift gate runs)
+# ---------------------------------------------------------------------------
+
+
+def test_build_table_deterministic_and_valid():
+    rows = [
+        {"name": "scan_pipeline/vector/float32/n=512", "us_per_call": 1.0},
+        {"name": "scan_pipeline/matmul/float32/n=512", "us_per_call": 2.0},
+        {"name": "scan_pipeline/vector/float32/n=4096", "us_per_call": 9.0},
+        {"name": "scan_pipeline/matmul/float32/n=4096", "us_per_call": 3.0},
+        {"name": "scan_pipeline/memcpy/float32/n=512", "us_per_call": 0.5},
+        {"name": "scan_pipeline/auto/float32/n=512", "us_per_call": 1.0},
+    ]
+    t1 = build_table(rows, backend="cpu")
+    t2 = build_table(list(reversed(rows)), backend="cpu")
+    assert t1 == t2
+    assert validate_table(t1) == []
+    assert t1["backends"]["cpu"]["scan"]["float32"] == \
+        [[512, "vector"], [4096, "matmul"]]
+    # memcpy and auto rows never contribute measurements
+    assert parse_bench_rows(rows[-2:]) == []
+    # unmeasured tuned ops get explicit vector fallbacks
+    assert t1["fallbacks"]["sort"] == "vector"
+
+
+def test_committed_table_valid_and_matches_baselines():
+    table = load_table()
+    assert table is not None
+    assert validate_table(table) == []
+    # the same check tools/tune.py --check (the tuning-table CI job) runs:
+    # regenerating from the committed baselines must reproduce the table
+    base = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "baseline")
+    rows = []
+    for f in sorted(os.listdir(base)):
+        if f.startswith("BENCH_") and f.endswith(".json"):
+            with open(os.path.join(base, f)) as fh:
+                rows.extend(json.load(fh))
+    regen = build_table(rows, backend=table["default_backend"])
+    strip = lambda t: {k: v for k, v in t.items() if k != "provenance"}
+    assert strip(regen) == strip(table)
+
+
+def test_validate_table_catches_bad_tables():
+    assert validate_table({"schema_version": 99}) != []
+    bad = json.loads(json.dumps(TEST_TABLE))
+    bad["backends"]["cpu"]["scan"]["float32"] = [[8192, "matmul"], [1024, "vector"]]
+    assert any("ascending" in p for p in validate_table(bad))
+    bad2 = json.loads(json.dumps(TEST_TABLE))
+    bad2["fallbacks"]["linear_scan"] = "warp"
+    assert any("warp" in p for p in validate_table(bad2))

@@ -19,10 +19,20 @@ gate regressions instead of only being uploaded as an artifact:
   slower machine does not.  (The scale is global, not per file, so a change
   that slows every row of one section — or one row of a two-row section —
   cannot hide inside its own normalization.)
+* **auto vs oracle** — every fresh ``method="auto"`` row (a ``/auto`` name
+  component) must be within ``--auto-factor`` (default 4x) of the best
+  *measured* concrete method on the same (op, n, dtype) row set — the
+  per-row oracle.  This gates the committed tuning table itself: a stale or
+  wrong table makes ``auto`` pick a slow method and the factor trips.  The
+  factor is deliberately loose (4x) because smoke rows are µs-scale and a
+  single dispatch hiccup can double a measurement; the point is to catch
+  "auto resolved to a method 10-100x off the crossover", not to re-litigate
+  timing noise.  Checked on fresh files only — no baseline needed.
 
 Usage::
 
     python tools/compare_bench.py bench-out benchmarks/baseline [--rtol RTOL]
+        [--auto-factor FACTOR]
 
 Exit status is non-zero on any failure (this is what fails CI).
 """
@@ -85,6 +95,41 @@ def compare_file(name: str, fresh: dict, base: dict) -> "tuple[list, dict]":
     return fails, ratios
 
 
+def check_auto_vs_oracle(name: str, fresh: dict, factor: float) -> list:
+    """Gate ``method="auto"`` rows against the best measured concrete method.
+
+    A row belongs to the gate when one ``/``-separated component of its name
+    is exactly ``auto``; its oracle group is every row whose name differs only
+    in that component.  Fails when no concrete sibling was measured, or when
+    ``auto`` is more than ``factor`` slower than the fastest sibling.
+    """
+    fails = []
+    for rname, r in sorted(fresh.items()):
+        parts = rname.split("/")
+        if "auto" not in parts:
+            continue
+        i = parts.index("auto")
+        siblings = {}
+        for other, ro in fresh.items():
+            op = other.split("/")
+            if (len(op) == len(parts) and op[:i] == parts[:i]
+                    and op[i + 1:] == parts[i + 1:] and op[i] != "auto"
+                    and ro["us_per_call"] > 0):
+                siblings[op[i]] = ro["us_per_call"]
+        if not siblings:
+            fails.append(f"{name}: {rname}: auto row has no measured "
+                         "concrete-method siblings to compare against")
+            continue
+        best_m = min(siblings, key=siblings.get)
+        best_t, auto_t = siblings[best_m], r["us_per_call"]
+        if auto_t > factor * best_t:
+            fails.append(
+                f"{name}: {rname}: auto {auto_t:.1f}us is "
+                f"{auto_t / best_t:.1f}x the best measured method "
+                f"({best_m}, {best_t:.1f}us); allowed factor {factor}")
+    return fails
+
+
 def main() -> int:
     """CLI entry point; returns the process exit status."""
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
@@ -95,6 +140,10 @@ def main() -> int:
                          "7x; smoke rows are µs-scale and dispatch-noise "
                          "dominated, so the timing gate is a coarse backstop "
                          "— the exact derived metrics are the sharp one)")
+    ap.add_argument("--auto-factor", type=float, default=4.0,
+                    help="allowed slowdown of a method='auto' row vs the best "
+                         "measured concrete method on the same row set "
+                         "(default 4.0; see module docstring)")
     args = ap.parse_args()
 
     base_files = sorted(glob.glob(os.path.join(args.baseline_dir, "BENCH_*.json")))
@@ -110,8 +159,11 @@ def main() -> int:
         if not os.path.exists(ff):
             fails.append(f"{fname}: baseline exists but no fresh file was produced")
             continue
-        file_fails, ratios = compare_file(fname, _load(ff), _load(bf))
+        fresh_rows = _load(ff)
+        file_fails, ratios = compare_file(fname, fresh_rows, _load(bf))
         fails.extend(file_fails)
+        fails.extend(check_auto_vs_oracle(fname, fresh_rows,
+                                          args.auto_factor))
         all_ratios.update(ratios)
     # timings, normalized by the suite-wide median ratio (machine speed) so a
     # section-wide slowdown cannot hide inside its own file's normalization
@@ -132,6 +184,8 @@ def main() -> int:
         set(os.path.basename(p) for p in base_files))
     for f in fresh_only:
         print(f"  note: {f} has no baseline yet (allowed; commit one to gate it)")
+        fails.extend(check_auto_vs_oracle(
+            f, _load(os.path.join(args.fresh_dir, f)), args.auto_factor))
     if fails:
         print(f"\nFAIL: {len(fails)} benchmark drift(s):", file=sys.stderr)
         for f in fails:

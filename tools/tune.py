@@ -1,0 +1,162 @@
+#!/usr/bin/env python
+"""Regenerate or validate the committed ``method="auto"`` tuning table.
+
+Two modes:
+
+* **generate** (default): read every ``BENCH_*.json`` under ``--bench-dir``
+  (default ``benchmarks/baseline/``), derive the piecewise length-bucket
+  crossover table via :func:`repro.core.autotune.build_table`, stamp
+  provenance (host, jax version, bench git rev), and write it to
+  ``src/repro/configs/tuning/default.json`` (or ``--output``).  Pass
+  ``--run-sweep`` to first run a fresh ``benchmarks/run.py --smoke`` sweep
+  into a temp dir and tune from that instead of the committed baselines.
+
+* ``--check``: the CI ``tuning-table`` job.  Validates the committed table's
+  schema and coverage (an entry or explicit fallback for every tuned op),
+  then regenerates from the committed baselines and fails on any drift
+  (provenance excluded) — the shipped table can never silently diverge from
+  the shipped measurements.
+
+Exit status 0 on success, 1 on any validation/drift failure.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.core.autotune import (  # noqa: E402
+    SCHEMA_VERSION, build_table, default_table_path, load_table,
+    validate_table,
+)
+
+
+def read_bench_rows(bench_dir: str) -> list:
+    """All rows of every ``BENCH_*.json`` in ``bench_dir`` (sorted by file)."""
+    rows = []
+    names = sorted(f for f in os.listdir(bench_dir)
+                   if f.startswith("BENCH_") and f.endswith(".json"))
+    if not names:
+        raise SystemExit(f"no BENCH_*.json files in {bench_dir}")
+    for name in names:
+        with open(os.path.join(bench_dir, name)) as f:
+            rows.extend(json.load(f))
+    return rows
+
+
+def gather_provenance(bench_dir: str) -> dict:
+    """Informational metadata for the generated table (ignored by --check)."""
+    import jax
+    try:
+        rev = subprocess.run(
+            ["git", "-C", REPO, "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10).stdout.strip() or None
+    except Exception:
+        rev = None
+    return {
+        "host": platform.node(),
+        "platform": platform.platform(),
+        "jax_version": jax.__version__,
+        "bench_git_rev": rev,
+        "bench_dir": os.path.relpath(bench_dir, REPO),
+    }
+
+
+def strip_provenance(table: dict) -> dict:
+    return {k: v for k, v in table.items() if k != "provenance"}
+
+
+def run_sweep(out_dir: str, smoke: bool) -> None:
+    """Run benchmarks/run.py with --json-out into out_dir (fresh tuning data)."""
+    cmd = [sys.executable, os.path.join(REPO, "benchmarks", "run.py"),
+           "--json-out", out_dir] + (["--smoke"] if smoke else ["--full"])
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    print(f"$ {' '.join(cmd)}", flush=True)
+    subprocess.run(cmd, check=True, env=env)
+
+
+def check(bench_dir: str, table_path: str) -> int:
+    """Validate schema/coverage and gate drift vs the committed baselines."""
+    try:
+        with open(table_path) as f:
+            committed = json.load(f)
+    except Exception as e:
+        print(f"FAIL: cannot read committed table {table_path}: {e}")
+        return 1
+    problems = validate_table(committed)
+    for p in problems:
+        print(f"FAIL(schema): {p}")
+    loaded = load_table()
+    if loaded is None:
+        problems.append("package data not loadable")
+        print("FAIL(package): importlib.resources cannot load the table "
+              "(check pyproject package-data and src/repro/__init__.py)")
+    elif strip_provenance(loaded) != strip_provenance(committed):
+        problems.append("package data != committed file")
+        print(f"FAIL(package): table loaded from package data differs from "
+              f"{table_path}")
+    regen = build_table(read_bench_rows(bench_dir),
+                        backend=committed.get("default_backend", "cpu"))
+    if strip_provenance(regen) != strip_provenance(committed):
+        problems.append("drift")
+        print("FAIL(drift): regenerating from the committed baselines yields "
+              "a different table; run `python tools/tune.py` and commit the "
+              "result")
+        print("--- regenerated ---")
+        print(json.dumps(strip_provenance(regen), indent=2, sort_keys=True))
+    if problems:
+        return 1
+    nops = sum(len(ops) for ops in committed.get("backends", {}).values())
+    print(f"OK: schema v{SCHEMA_VERSION}, {nops} op entries, "
+          f"{len(committed.get('fallbacks', {}))} explicit fallbacks, "
+          "no drift vs baselines")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--bench-dir",
+                    default=os.path.join(REPO, "benchmarks", "baseline"),
+                    help="directory of BENCH_*.json inputs")
+    ap.add_argument("--output", default=default_table_path(),
+                    help="where to write the table (generate mode)")
+    ap.add_argument("--backend", default="cpu",
+                    help="backend label for the measurements")
+    ap.add_argument("--run-sweep", action="store_true",
+                    help="run a fresh benchmarks/run.py sweep first and tune "
+                         "from its output instead of --bench-dir")
+    ap.add_argument("--full", action="store_true",
+                    help="with --run-sweep: full sizes instead of --smoke")
+    ap.add_argument("--check", action="store_true",
+                    help="validate the committed table + drift gate (CI)")
+    args = ap.parse_args()
+
+    if args.check:
+        return check(args.bench_dir, args.output)
+
+    bench_dir = args.bench_dir
+    if args.run_sweep:
+        import tempfile
+        bench_dir = tempfile.mkdtemp(prefix="tune_sweep_")
+        run_sweep(bench_dir, smoke=not args.full)
+    table = build_table(read_bench_rows(bench_dir), backend=args.backend,
+                        provenance=gather_provenance(bench_dir))
+    os.makedirs(os.path.dirname(args.output), exist_ok=True)
+    with open(args.output, "w") as f:
+        json.dump(table, f, indent=2, sort_keys=True)
+        f.write("\n")
+    problems = validate_table(table)
+    for p in problems:
+        print(f"WARN: {p}")
+    print(f"wrote {args.output}")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
