@@ -28,6 +28,10 @@ the TPU-side projection lives in EXPERIMENTS.md §Roofline).
                  method × dtype on gated-decay payloads — the recurrent-model
                  decode workload on the weighted-triangular matmul scan
                  -> BENCH_linrec.json
+  precision      precision axis (highest/compensated/fast) on the matmul-
+                 engine methods: time + max-ulp-vs-fp64 per op × method ×
+                 precision, gated against the documented ulp bound
+                 -> BENCH_precision.json
 """
 from __future__ import annotations
 
@@ -462,6 +466,75 @@ def linrec_sweep(smoke=False):
 
 
 # ---------------------------------------------------------------------------
+# precision: fp16/bf16 matmul-engine scans + ulp accuracy (ISSUE 7 tentpole)
+# ---------------------------------------------------------------------------
+
+
+def precision_sweep(smoke=False):
+    """Precision axis sweep: time + max-ulp per op × engine method × precision.
+
+    Every row runs one scan-family op at ``precision in ("highest",
+    "compensated", "fast")`` on the same payload and scores the result against
+    the fp64 sequential reference of :mod:`repro.analysis.ulp` — the derived
+    column carries ``max_ulp`` (in fp32 ulps at the conditioning scale) and
+    ``ulp_bound`` (the documented contract), which ``tools/compare_bench.py``
+    gates: ``max_ulp <= ulp_bound`` always, and bounded drift vs baseline.
+
+    ``time_vs_highest`` records the speed ratio against the fp32 path of the
+    same method.  On the CPU test backend XLA contracts fp16/bf16 through the
+    same fp32 units, so the split's extra products make compensated ~parity to
+    ~3x slower here; on an fp16-native matrix engine (the paper's target) the
+    two-to-three fp16 products replace one fp32 product at twice the MAC rate
+    — the documented-speedup column is measured, not modelled, so the CPU
+    baseline records parity and a hardware runner records the gain.
+    """
+    from repro.analysis import ulp
+    from repro.core.linrec import linear_scan
+    from repro.core.segmented import segment_scan
+    methods = ("matmul", "kernel", "blocked")
+    precisions = ("highest", "compensated", "fast")
+    s = 32 if smoke else 128
+    sweep_lens = (2048,) if smoke else (16384, 65536)
+    rng = np.random.default_rng(9)
+    for n in sweep_lens:
+        x = np.asarray(rng.standard_normal(n), np.float32)
+        a = np.asarray(np.exp(-np.abs(rng.standard_normal((4, n))) * 0.05),
+                       np.float32)
+        b = np.asarray(rng.standard_normal((4, n)), np.float32)
+        cuts = np.sort(rng.integers(0, n + 1, max(1, n // 512)))
+        off = np.concatenate([[0], cuts, [n]]).astype(np.int32)
+        cases = (
+            ("scan",
+             lambda m, p: jax.jit(functools.partial(
+                 scan, method=m, precision=p, tile_s=s)),
+             (jnp.asarray(x),), ulp.scan_ref(x), ulp.scan_scale(x)),
+            ("linrec",
+             lambda m, p: jax.jit(lambda u, v: linear_scan(
+                 u, v, method=m, precision=p, tile_s=s)),
+             (jnp.asarray(a), jnp.asarray(b)),
+             ulp.linrec_ref(a, b), ulp.linrec_scale(a, b)),
+            ("segscan",
+             lambda m, p: jax.jit(lambda v, o: segment_scan(
+                 v, o, method=m, precision=p, tile_s=s)),
+             (jnp.asarray(x), jnp.asarray(off)),
+             ulp.segment_scan_ref(x, off), ulp.segment_scan_scale(x, off)),
+        )
+        for op, make, args_, ref, scale in cases:
+            base = None
+            for m in methods:
+                for p in precisions:
+                    fn = make(m, p)
+                    t = timeit(fn, *args_, repeats=3, warmup=1)
+                    if p == "highest":
+                        base = t
+                    mu = ulp.max_ulp(np.asarray(fn(*args_)), ref, scale)
+                    row(f"precision/{op}/{m}/{p}/n={n}", t,
+                        f"n={n};max_ulp={mu:.2f};"
+                        f"ulp_bound={ulp.ulp_bound(p, n):.1f};"
+                        f"time_vs_highest={t / base:.2f}x")
+
+
+# ---------------------------------------------------------------------------
 # Operator benchmarks: split / sort / top-p across methods and dtypes
 # (tracks the fused-kernel trajectory, not just raw scan — ISSUE 1 tentpole)
 # ---------------------------------------------------------------------------
@@ -554,13 +627,14 @@ def main() -> None:
         "sort": lambda: sort_sweep([512] if args.smoke else lens[:2]),
         "segscan": lambda: segscan_sweep(smoke=args.smoke),
         "linrec": lambda: linrec_sweep(smoke=args.smoke),
+        "precision": lambda: precision_sweep(smoke=args.smoke),
         "ops": lambda: ops_operators(smoke=args.smoke),
     }
     only = set(args.only.split(",")) if args.only else None
     if args.smoke and only is None:
         # fast, single-process sections (sort carries the pass-count guard)
         only = {"fig3", "fig10", "fig11", "scan_pipeline", "sort", "segscan",
-                "linrec", "ops"}
+                "linrec", "precision", "ops"}
     print("name,us_per_call,derived")
     for name, fn in sections.items():
         if only and name not in only:

@@ -1,0 +1,186 @@
+"""ulp-accuracy oracle for the precision axis (``precision="compensated"``).
+
+The precision contract of :mod:`repro.core.precision` is stated in **fp32 ulps
+at the conditioning scale**: an error of ``k`` ulps means the result differs
+from the fp64 sequential reference by at most ``k`` spacings of fp32 *at the
+magnitude the scan actually accumulated through*, not at the magnitude of the
+(possibly cancelled-to-zero) output.  Measuring at the output's own magnitude
+would let benign cancellation — ``cumsum`` of a ±-balanced array passing
+through zero — blow the metric up unboundedly for *every* float method,
+including the fp32 ``"vector"`` reference the contract is stated against.
+
+The conditioning scales (all fp64, sequential, order-faithful):
+
+* scan / cumsum:        ``scale_i = Σ_{j<=i} |x_j|``
+* linear recurrence:    ``scale_i = |a_i|·scale_{i-1} + |b_i|``
+* segmented scan:       the *global* (unrestarted) scan scale — the method
+  table includes the subtract-the-segment-start formulation
+  (``segmented._segment_scan_unfused``), whose rounding error lives at the
+  packed global prefix scale, so that is the scale the contract shares
+  across methods (the fused kernels' per-segment errors are only smaller).
+
+Per-precision bounds are ``ULP_COEFF[precision] · √n`` — the random-walk
+growth of rounding error with accumulation length.  The coefficients were set
+by measuring the hypothesis sweeps in ``tests/test_precision.py`` across
+methods, tile sizes and adversarial value distributions, then adding margin;
+``"compensated"`` is required to stay within a small constant factor of
+``"highest"`` (the documented recovery claim), while ``"fast"`` (bf16, ~8
+significand bits) is documented, loose, and ~2^16 wider.
+
+Two documented provisos on the per-element bound:
+
+* every precision assumes inputs in fp32's *normal* range: XLA flushes
+  subnormal operands to zero in matmul **and** in the plain multiplies the
+  split's ``ldexp`` scaling lowers to, so subnormal inputs flush to exact
+  zeros on every engine path and precision alike (deterministically — no
+  nan/inf; ``tests/test_precision.py`` pins the flush down).  Normal-range
+  inputs arbitrarily close to ``tiny`` are fine: the per-slice scaling is an
+  exact power-of-two move, so the bound holds unchanged at exponent extremes.
+* ``"compensated"`` assumes the dynamic range *within one contraction slice*
+  (a tile row) fits the split's ~2^35 window; elements smaller than that
+  relative to their slice max are below fp32 significance at the slice scale
+  and are dropped, so for such inputs the bound is only guaranteed at the
+  end-of-scan conditioning scale (``scale[..., -1:]``), not per element.
+
+Everything here is plain numpy so the oracle itself cannot inherit a JAX
+rounding quirk; ``benchmarks/run.py precision`` reuses it for the ``max_ulp``
+derived column that CI gates against ``BENCH_precision.json``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "ULP_COEFF", "ulp_bound", "ulp_error", "max_ulp",
+    "scan_ref", "scan_scale", "linrec_ref", "linrec_scale",
+    "segment_scan_ref", "segment_scan_scale",
+]
+
+# bound = ULP_COEFF[precision] * sqrt(n) fp32 ulps at the conditioning scale.
+# "highest" and "compensated" share the small-constant regime (the recovery
+# claim); "fast" is bf16's 16-bit-wider spacing plus the same √n growth.
+ULP_COEFF = {
+    "highest": 8.0,
+    "compensated": 16.0,
+    "fast": 8.0 * 2.0 ** 16,
+}
+
+
+def ulp_bound(precision: str, n: int) -> float:
+    """The documented max-ulp bound for one op call of length ``n``.
+
+    Args:
+        precision: One of ``ULP_COEFF``.
+        n: Scanned length (accumulation count).
+
+    Returns:
+        The bound in fp32 ulps at the conditioning scale.
+
+    Example:
+        >>> ulp_bound("highest", 4) == 16.0
+        True
+    """
+    return ULP_COEFF[precision] * float(np.sqrt(max(n, 1)))
+
+
+def _spacing_at(scale: np.ndarray) -> np.ndarray:
+    """fp32 ulp size at magnitude ``scale`` (clamped to the normal range)."""
+    s = np.abs(np.asarray(scale, np.float64))
+    tiny = float(np.finfo(np.float32).tiny)
+    huge = float(np.finfo(np.float32).max)
+    s = np.clip(s, tiny, huge)
+    return np.spacing(s.astype(np.float32)).astype(np.float64)
+
+
+def ulp_error(got, ref, scale) -> np.ndarray:
+    """Elementwise error of ``got`` vs ``ref`` in fp32 ulps at ``scale``.
+
+    Non-finite reference elements are compared structurally: a matching
+    ``inf`` (same sign) or ``nan`` scores 0 ulps, a mismatch scores ``inf`` —
+    the compensated split's contract is that non-finites propagate exactly as
+    through an fp32 contraction.
+
+    Args:
+        got: Computed values (any float dtype; cast to fp64).
+        ref: fp64 reference values, same shape.
+        scale: fp64 conditioning scale, same shape (see module docstring).
+
+    Returns:
+        fp64 array of ulp counts (``>= 0``).
+
+    Example:
+        >>> import numpy as np
+        >>> ref = np.asarray([1.0, np.inf])
+        >>> got = np.asarray([1.0 + np.spacing(np.float32(1.0)), np.inf])
+        >>> ulp_error(got, ref, np.asarray([1.0, 1.0])).round(2).tolist()
+        [1.0, 0.0]
+    """
+    got = np.asarray(got, np.float64)
+    ref = np.asarray(ref, np.float64)
+    err = np.abs(got - ref) / _spacing_at(scale)
+    bad = ~np.isfinite(ref)
+    if bad.any():
+        same = (np.isnan(ref) & np.isnan(got)) | (ref == got)
+        err = np.where(bad, np.where(same, 0.0, np.inf), err)
+    return err
+
+
+def max_ulp(got, ref, scale) -> float:
+    """``float(np.max(ulp_error(...)))`` — 0.0 for empty inputs."""
+    e = ulp_error(got, ref, scale)
+    return float(np.max(e)) if e.size else 0.0
+
+
+# ---------------------------------------------------------------------------
+# fp64 sequential references + conditioning scales
+# ---------------------------------------------------------------------------
+
+
+def scan_ref(x) -> np.ndarray:
+    """fp64 inclusive prefix sum over the last axis (the cumsum oracle)."""
+    return np.cumsum(np.asarray(x, np.float64), axis=-1)
+
+
+def scan_scale(x) -> np.ndarray:
+    """Conditioning scale of :func:`scan_ref`: prefix sums of ``|x|``."""
+    return np.cumsum(np.abs(np.asarray(x, np.float64)), axis=-1)
+
+
+def linrec_ref(a, b) -> np.ndarray:
+    """fp64 sequential ``y_t = a_t * y_{t-1} + b_t`` over the last axis."""
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    out = np.empty_like(b)
+    state = np.zeros(b.shape[:-1], np.float64)
+    for i in range(b.shape[-1]):
+        state = a[..., i] * state + b[..., i]
+        out[..., i] = state
+    return out
+
+
+def linrec_scale(a, b) -> np.ndarray:
+    """Conditioning scale of :func:`linrec_ref`: the ``|a|, |b|`` recurrence."""
+    return linrec_ref(np.abs(np.asarray(a, np.float64)),
+                      np.abs(np.asarray(b, np.float64)))
+
+
+def segment_scan_ref(x, offsets) -> np.ndarray:
+    """fp64 per-segment inclusive prefix sums of packed 1-D ``x``."""
+    x = np.asarray(x, np.float64)
+    off = np.asarray(offsets)
+    out = np.empty_like(x)
+    for i in range(off.shape[0] - 1):
+        out[off[i]:off[i + 1]] = np.cumsum(x[off[i]:off[i + 1]])
+    return out
+
+
+def segment_scan_scale(x, offsets) -> np.ndarray:
+    """Conditioning scale of :func:`segment_scan_ref`: *global* ``|x|`` prefix.
+
+    Deliberately not restarted at boundaries — see the module docstring: the
+    unfused (matmul/vector) segmented formulation subtracts the unsegmented
+    scan at each segment start, so its rounding error is at the packed global
+    prefix scale and the shared contract must be stated there.
+    """
+    del offsets  # the scale is offset-independent by design (see docstring)
+    return scan_scale(x)

@@ -2,6 +2,9 @@
 from repro.core.autotune import (
     resolve_method, maybe_resolve, method_override, AutotuneFallbackWarning,
 )
+from repro.core.precision import (
+    PRECISIONS, precision_override, resolve_precision,
+)
 from repro.core.scan import (
     scan, cumsum, tile_scan_scanu, tile_scan_scanul1, upper_ones,
     strictly_lower_ones, accum_dtype_for,

@@ -55,6 +55,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.autotune import maybe_resolve
+from repro.core.precision import normalize_exponents, pdot, resolve_precision
 from repro.core.primitives import _register, dispatch
 from repro.core.scan import METHODS, accum_dtype_for
 
@@ -101,7 +102,6 @@ def linrec_accum_dtype_for(dtype) -> jnp.dtype:
 # fp32's exponent range for n ≤ 256.  Longer chains must be chunked through
 # the recursive carry scan (as _linrec_matmul and _linrec_block do).
 MAX_TILE = 256
-_SQRT_HALF = 0.7071067811865476
 
 
 def _pair_w(a: jax.Array, acc) -> jax.Array:
@@ -112,8 +112,10 @@ def _pair_w(a: jax.Array, acc) -> jax.Array:
     row ``b`` under multipliers ``a``, so one batched MXU contraction scans a
     whole tile.  Built in-register from cumulative products of
     **exponent-normalized** multipliers: each ``a_k`` splits exactly into
-    ``a_norm_k · 2^{e_k}`` with ``|a_norm_k| ∈ [√½, √2)`` (``frexp``/``ldexp``
-    are power-of-two scalings — no rounding), the mantissa product/quotient
+    ``a_norm_k · 2^{e_k}`` with ``|a_norm_k| ∈ [√½, √2)``
+    (:func:`repro.core.precision.normalize_exponents` — the same exact
+    power-of-two machinery the compensated fp16 split scales its slices
+    with; no rounding), the mantissa product/quotient
     never under- or overflows for tile-bounded windows, and the integer
     exponents travel through an exact ``cumsum``, re-applied per window with
     ``ldexp`` (which saturates gracefully to 0/inf only when the *true*
@@ -127,10 +129,8 @@ def _pair_w(a: jax.Array, acc) -> jax.Array:
     s = a.shape[-1]
     az = a == 0
     a1 = jnp.where(az, jnp.ones((), acc), a.astype(acc))
-    m, e = jnp.frexp(a1)                                # a1 = m·2^e, |m| ∈ [½,1)
-    small = jnp.abs(m) < _SQRT_HALF
-    a_norm = jnp.where(small, m * 2, m)                 # |a_norm| ∈ [√½, √2)
-    es = jnp.cumsum(jnp.where(small, e - 1, e).astype(jnp.int32), axis=-1)
+    a_norm, e = normalize_exponents(a1, acc)            # |a_norm| ∈ [√½, √2)
+    es = jnp.cumsum(e, axis=-1)
     p = jnp.cumprod(a_norm, axis=-1)                    # |p| ∈ 2^±(s/2): safe
     pos = jax.lax.broadcasted_iota(jnp.int32, a.shape, a.ndim - 1)
     lastz = jax.lax.cummax(jnp.where(az, pos, -1), axis=a.ndim - 1)
@@ -143,13 +143,19 @@ def _pair_w(a: jax.Array, acc) -> jax.Array:
     return jnp.where(ri == cj, jnp.ones((), acc), w)
 
 
-def _w_matvec(w: jax.Array, b: jax.Array, acc) -> jax.Array:
-    """Batched ``(..., s, s) @ (..., s)`` contraction in the accumulation dtype."""
-    return jnp.matmul(w, b.astype(acc)[..., None],
-                      preferred_element_type=acc)[..., 0].astype(acc)
+def _w_matvec(w: jax.Array, b: jax.Array, acc,
+              precision: str = "highest") -> jax.Array:
+    """Batched ``(..., s, s) @ (..., s)`` contraction in the accumulation dtype.
+
+    The one data×data contraction of the subsystem: under
+    ``precision="compensated"`` *both* operands Ozaki-split (``W`` per row,
+    ``b`` per vector — 3 fp16 products, the ``lo×lo`` term dropped).
+    """
+    return pdot(w, b.astype(acc)[..., None], acc=acc, precision=precision,
+                exact="none")[..., 0].astype(acc)
 
 
-def _linrec_block(a2: jax.Array, b2: jax.Array, acc):
+def _linrec_block(a2: jax.Array, b2: jax.Array, acc, precision: str = "highest"):
     """Linear recurrence of one ``(m, s)`` row-major block held in VMEM/registers.
 
     The ScanUL1 structure generalized to weighted triangles: per-row ``W @ b``
@@ -162,14 +168,15 @@ def _linrec_block(a2: jax.Array, b2: jax.Array, acc):
     — plain cumulative products, zeros included exactly.
     """
     rowmult = jnp.cumprod(a2.astype(acc), axis=-1)       # (m, s)
-    local = _w_matvec(_pair_w(a2, acc), b2, acc)         # (m, s) row-local
+    local = _w_matvec(_pair_w(a2, acc), b2, acc, precision)  # (m, s) row-local
     rp = rowmult[..., :, -1]                             # row products
     rl = local[..., :, -1]                               # row-local last values
     if rp.shape[-1] <= MAX_TILE:
-        y_rows = _w_matvec(_pair_w(rp, acc), rl, acc)    # inclusive over rows
+        y_rows = _w_matvec(_pair_w(rp, acc), rl, acc, precision)
     else:  # tall blocks: chain the row summaries through the chunked scan
         y_rows = _linrec_matmul(rp, rl, method="matmul", tile_s=128,
-                                block_tiles=0, accum_dtype=acc)
+                                block_tiles=0, accum_dtype=acc,
+                                precision=precision)
     pad_row = [(0, 0)] * (y_rows.ndim - 1) + [(1, 0)]
     carry_rows = jnp.pad(y_rows, pad_row)[..., :-1]      # exclusive
     out = local + rowmult * carry_rows[..., :, None]
@@ -185,7 +192,8 @@ def _linrec_block(a2: jax.Array, b2: jax.Array, acc):
 
 
 @_register("linear_scan", "vector")
-def _linrec_vector(a, b, *, method, tile_s, block_tiles, accum_dtype):
+def _linrec_vector(a, b, *, method, tile_s, block_tiles, accum_dtype,
+                   precision="highest"):
     """Affine-pair ``associative_scan`` — the correctness oracle."""
     acc = accum_dtype
     av = a.astype(acc)
@@ -204,7 +212,8 @@ def _linrec_vector(a, b, *, method, tile_s, block_tiles, accum_dtype):
 
 
 @_register("linear_scan", "matmul")
-def _linrec_matmul(a, b, *, method, tile_s, block_tiles, accum_dtype):
+def _linrec_matmul(a, b, *, method, tile_s, block_tiles, accum_dtype,
+                   precision="highest"):
     """Chunked ``W @ b`` contractions + recursive cross-chunk affine carry scan.
 
     Chunks of ``tile_s`` elements each contract against their in-register
@@ -222,7 +231,7 @@ def _linrec_matmul(a, b, *, method, tile_s, block_tiles, accum_dtype):
     q = tile_s
     n = a.shape[-1]
     if n <= q:
-        return _w_matvec(_pair_w(a, acc), b, acc)
+        return _w_matvec(_pair_w(a, acc), b, acc, precision)
     pad = (-n) % q
     if pad:  # identity affine element: a = 1, b = 0
         a = jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, pad)], constant_values=1)
@@ -230,12 +239,13 @@ def _linrec_matmul(a, b, *, method, tile_s, block_tiles, accum_dtype):
     nc = a.shape[-1] // q
     ac = a.reshape(*a.shape[:-1], nc, q)
     bc = b.reshape(*b.shape[:-1], nc, q)
-    local = _w_matvec(_pair_w(ac, acc), bc, acc)         # (..., nc, q)
+    local = _w_matvec(_pair_w(ac, acc), bc, acc, precision)  # (..., nc, q)
     mult = jnp.cumprod(ac.astype(acc), axis=-1)          # carry multipliers
     pa = mult[..., -1]                                   # chunk products
     sb = local[..., -1]                                  # chunk local lasts
     carry_inc = _linrec_matmul(pa, sb, method=method, tile_s=q,
-                               block_tiles=block_tiles, accum_dtype=acc)
+                               block_tiles=block_tiles, accum_dtype=acc,
+                               precision=precision)
     pad_c = [(0, 0)] * (carry_inc.ndim - 1) + [(1, 0)]
     carry_in = jnp.pad(carry_inc, pad_c)[..., :-1]       # exclusive
     out = local + mult * carry_in[..., None]
@@ -250,20 +260,24 @@ def _broadcast_pair(a, b):
 
 
 @_register("linear_scan", "kernel")
-def _linrec_kernel(a, b, *, method, tile_s, block_tiles, accum_dtype):
+def _linrec_kernel(a, b, *, method, tile_s, block_tiles, accum_dtype,
+                   precision="highest"):
     """Fused sequential-grid tile kernel with the SMEM running-state carry."""
     from repro.kernels import ops as _kops  # local import to avoid cycle
     a, b = _broadcast_pair(a, b)
-    return _kops.linrec_kernel(a, b, s=tile_s, accum_dtype=accum_dtype)
+    return _kops.linrec_kernel(a, b, s=tile_s, accum_dtype=accum_dtype,
+                               precision=precision)
 
 
 @_register("linear_scan", "blocked")
-def _linrec_blocked(a, b, *, method, tile_s, block_tiles, accum_dtype):
+def _linrec_blocked(a, b, *, method, tile_s, block_tiles, accum_dtype,
+                    precision="highest"):
     """§4 three-phase pipeline with an affine phase-2 carry scan."""
     from repro.kernels import ops as _kops  # local import to avoid cycle
     a, b = _broadcast_pair(a, b)
     return _kops.linrec_blocked_kernel(a, b, s=tile_s, block_tiles=block_tiles,
-                                       accum_dtype=accum_dtype)
+                                       accum_dtype=accum_dtype,
+                                       precision=precision)
 
 
 # ---------------------------------------------------------------------------
@@ -282,17 +296,17 @@ def _linrec_blocked(a, b, *, method, tile_s, block_tiles, accum_dtype):
 # same dispatcher (the backward pass is one more method-matched scan).
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
-def _linrec_core(a, b, method, tile_s, block_tiles, acc):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
+def _linrec_core(a, b, method, tile_s, block_tiles, acc, precision):
     """Method-dispatched inclusive recurrence over the last axis (zero init)."""
     return dispatch("linear_scan", method)(
         a, b, method=method, tile_s=tile_s, block_tiles=block_tiles,
-        accum_dtype=acc)
+        accum_dtype=acc, precision=precision)
 
 
-def _linrec_core_fwd(a, b, method, tile_s, block_tiles, acc):
+def _linrec_core_fwd(a, b, method, tile_s, block_tiles, acc, precision):
     """Forward pass; residuals are the multipliers and the output states."""
-    y = _linrec_core(a, b, method, tile_s, block_tiles, acc)
+    y = _linrec_core(a, b, method, tile_s, block_tiles, acc, precision)
     return y, (a, y)
 
 
@@ -305,18 +319,20 @@ def _unbroadcast(x, shape):
     return jnp.sum(x, axis=axes, keepdims=True)
 
 
-def _linrec_core_bwd(method, tile_s, block_tiles, acc, res, g):
+def _linrec_core_bwd(method, tile_s, block_tiles, acc, precision, res, g):
     """Reverse-recurrence adjoint (module comment above), method-matched.
 
     ``b`` enters the core pre-broadcast to the output shape (public wrapper),
     so its cotangent is ``lam`` as-is; ``a`` may carry broadcast leading dims
     (shared decays) whose cotangent sum-reduces back to the primal shape.
+    The backward recurrence reruns the dispatcher with the same ``precision``
+    — a compensated forward pass gets a compensated adjoint.
     """
     a, y = res
     ash = jnp.concatenate([a[..., 1:], jnp.ones_like(a[..., :1])], axis=-1)
     lam = jnp.flip(
         _linrec_core(jnp.flip(ash, axis=-1), jnp.flip(g.astype(acc), axis=-1),
-                     method, tile_s, block_tiles, acc), axis=-1)
+                     method, tile_s, block_tiles, acc, precision), axis=-1)
     y_prev = jnp.concatenate([jnp.zeros_like(y[..., :1]), y[..., :-1]], axis=-1)
     ga = _unbroadcast(lam * y_prev, a.shape).astype(a.dtype)
     return ga, lam.astype(acc)
@@ -338,6 +354,7 @@ def linear_scan(
     exclusive: bool = False,
     reverse: bool = False,
     method: str = "auto",
+    precision: str = "highest",
     initial=None,
     tile_s: int = 128,
     block_tiles: int = 8,
@@ -364,6 +381,14 @@ def linear_scan(
         method: ``"auto"`` (default; resolved from the committed tuning table
             by :mod:`repro.core.autotune`) or one of ``METHODS`` (see module
             docstring for what runs).
+        precision: Engine feed precision for the ``W @ b`` contractions
+            (:mod:`repro.core.precision`, dispatch rule 9) — ``"highest"``
+            (fp32, default), ``"compensated"`` (fp16 Ozaki splits of *both*
+            operands, documented ulp bound vs ``"vector"``) or ``"fast"``
+            (bf16, loose bound).  Applies to both the forward scan and its
+            custom-VJP backward recurrence; only fp32 contractions are
+            affected.  Explicit ``method="vector"`` rejects a non-default
+            value.
         initial: Optional starting state ``y_{-1}`` (scalar or array
             broadcastable to ``a``/``b`` minus the scan axis).  Folded into
             the first step exactly (``b_0 + a_0 * initial``).  Length-1 scans
@@ -381,7 +406,9 @@ def linear_scan(
         accumulation dtype.
 
     Raises:
-        ValueError: If ``method`` is unknown.
+        ValueError: If ``method`` or ``precision`` is unknown, or an explicit
+            non-default ``precision`` is combined with an explicit
+            ``method="vector"``.
 
     Example:
         >>> import jax.numpy as jnp
@@ -422,8 +449,11 @@ def linear_scan(
         a = jnp.broadcast_to(a, a.shape[:-1] + (n,))
     if b.shape[-1] != n:
         b = jnp.broadcast_to(b, b.shape[:-1] + (n,))
+    explicit_method = method != "auto"
     method = maybe_resolve(method, "linear_scan", n,
                            jnp.result_type(a.dtype, b.dtype))
+    precision = resolve_precision(precision, method=method,
+                                  explicit_method=explicit_method)
     full = jnp.broadcast_shapes(a.shape, b.shape)
     # b is output-sized anyway — materialize it (keeps the custom-VJP
     # cotangent shapes trivial); a stays unbroadcast for the shared-W saving.
@@ -447,7 +477,8 @@ def linear_scan(
             # launch) for the stateful-decode single-step case.
             out = jnp.broadcast_to(b, full).astype(acc)
         else:
-            out = _linrec_core(a, b, method, tile_s, block_tiles, acc)
+            out = _linrec_core(a, b, method, tile_s, block_tiles, acc,
+                               precision)
         if exclusive:
             if initial is not None:
                 init = jnp.asarray(initial, acc)

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.autotune import maybe_resolve
+from repro.core.precision import pdot, resolve_precision
 
 __all__ = [
     "scan",
@@ -138,7 +139,8 @@ def accum_dtype_for(dtype) -> jnp.dtype:
 # ---------------------------------------------------------------------------
 
 
-def tile_scan_scanu(a: jax.Array, *, accum_dtype=None) -> jax.Array:
+def tile_scan_scanu(a: jax.Array, *, accum_dtype=None,
+                    precision: str = "highest") -> jax.Array:
     """ScanU tile step (paper Alg. 1): ``A @ U_s`` + propagation of row partials.
 
     The matmul computes the ``s`` per-row local scans; propagation then adds
@@ -150,6 +152,8 @@ def tile_scan_scanu(a: jax.Array, *, accum_dtype=None) -> jax.Array:
             of ``ℓ = s²`` consecutive sequence elements.
         accum_dtype: Accumulation dtype override; defaults to
             ``accum_dtype_for(a.dtype)``.
+        precision: Engine feed precision for the fp32 contraction
+            (:mod:`repro.core.precision`); only affects fp32 tiles.
 
     Returns:
         The full inclusive tile scan, shape ``(..., s, s)``, in the
@@ -164,13 +168,14 @@ def tile_scan_scanu(a: jax.Array, *, accum_dtype=None) -> jax.Array:
     s = a.shape[-1]
     acc = accum_dtype or accum_dtype_for(a.dtype)
     u = upper_ones(s, _operand_dtype(a.dtype))
-    local = jnp.matmul(a, u, preferred_element_type=acc).astype(acc)
+    local = pdot(a, u, acc=acc, precision=precision, exact="right").astype(acc)
     row_sums = local[..., :, -1]
     row_prefix = jnp.cumsum(row_sums, axis=-1, dtype=acc) - row_sums  # exclusive
     return local + row_prefix[..., :, None]
 
 
-def tile_scan_scanul1(a: jax.Array, *, accum_dtype=None) -> jax.Array:
+def tile_scan_scanul1(a: jax.Array, *, accum_dtype=None,
+                      precision: str = "highest") -> jax.Array:
     """ScanUL1 tile step (paper Alg. 2 / Eq. 1): ``A@U + L⁻ @ (A@1)`` — matmuls only.
 
     ``A @ 1_s`` is computed as a row-sum broadcast (identical result, avoids one
@@ -181,6 +186,8 @@ def tile_scan_scanul1(a: jax.Array, *, accum_dtype=None) -> jax.Array:
         a: ``(..., s, s)`` row-major tile(s).
         accum_dtype: Accumulation dtype override; defaults to
             ``accum_dtype_for(a.dtype)``.
+        precision: Engine feed precision for the fp32 contractions
+            (:mod:`repro.core.precision`); only affects fp32 tiles.
 
     Returns:
         The full inclusive tile scan, shape ``(..., s, s)``, in the
@@ -197,10 +204,10 @@ def tile_scan_scanul1(a: jax.Array, *, accum_dtype=None) -> jax.Array:
     od = _operand_dtype(a.dtype)
     u = upper_ones(s, od)
     lm = strictly_lower_ones(s, od)
-    c2 = jnp.matmul(a, u, preferred_element_type=acc).astype(acc)
+    c2 = pdot(a, u, acc=acc, precision=precision, exact="right").astype(acc)
     # C1 = A @ 1_s  ==  row sums broadcast along columns.
     c1 = jnp.sum(a.astype(acc), axis=-1, keepdims=True) * jnp.ones((1, s), acc)
-    c2 = c2 + jnp.matmul(lm.astype(acc), c1, preferred_element_type=acc)
+    c2 = c2 + pdot(lm.astype(acc), c1, acc=acc, precision=precision, exact="left")
     return c2
 
 
@@ -226,7 +233,8 @@ _TILE_FNS = {"scanu": tile_scan_scanu, "scanul1": tile_scan_scanul1}
 # ---------------------------------------------------------------------------
 
 
-def _scan_last_axis_matmul(x: jax.Array, s: int, variant: str, acc) -> jax.Array:
+def _scan_last_axis_matmul(x: jax.Array, s: int, variant: str, acc,
+                           precision: str = "highest") -> jax.Array:
     """Multi-level SSA block scan over the last axis using matmul tile scans."""
     *lead, n = x.shape
     ell = s * s
@@ -235,19 +243,21 @@ def _scan_last_axis_matmul(x: jax.Array, s: int, variant: str, acc) -> jax.Array
         u = upper_ones(n, _operand_dtype(x.dtype)) if n > 1 else None
         if n == 1:
             return x.astype(acc)
-        return jnp.matmul(x[..., None, :].astype(_operand_dtype(x.dtype)), u,
-                          preferred_element_type=acc)[..., 0, :].astype(acc)
+        return pdot(x[..., None, :].astype(_operand_dtype(x.dtype)), u,
+                    acc=acc, precision=precision,
+                    exact="right")[..., 0, :].astype(acc)
 
     n_pad = (-n) % ell
     xp = jnp.pad(x, [(0, 0)] * len(lead) + [(0, n_pad)]) if n_pad else x
     nt = xp.shape[-1] // ell
     tiles = xp.reshape(*lead, nt, s, s)
-    local = _TILE_FNS[variant](tiles, accum_dtype=acc)          # (..., nt, s, s)
+    local = _TILE_FNS[variant](tiles, accum_dtype=acc,
+                               precision=precision)             # (..., nt, s, s)
     tile_sums = local[..., -1, -1]                              # (..., nt)
     # Scan over the (much smaller) tile sums; recurse with the matmul method when the
     # tile-sum array itself is long enough to benefit.
     if nt > ell:
-        tile_prefix = _scan_last_axis_matmul(tile_sums, s, variant, acc)
+        tile_prefix = _scan_last_axis_matmul(tile_sums, s, variant, acc, precision)
     else:
         tile_prefix = jnp.cumsum(tile_sums, axis=-1, dtype=acc)
     tile_prefix = tile_prefix - tile_sums                       # exclusive
@@ -263,6 +273,7 @@ def scan(
     exclusive: bool = False,
     reverse: bool = False,
     method: str = "auto",
+    precision: str = "highest",
     variant: str = "scanul1",
     tile_s: int = 128,
     block_tiles: int = 8,
@@ -299,6 +310,16 @@ def scan(
               (``repro.kernels.scan_pipeline``): parallel per-block partial
               scans, a block-sum carry scan, and a fused carry broadcast-add,
               so each element is read and written once.
+        precision: Engine feed precision for the matmul methods
+            (``"highest"``/``"compensated"``/``"fast"``), resolved pre-trace
+            like ``method`` (:mod:`repro.core.precision`; ``precision_override``
+            context > ``REPRO_SCAN_PRECISION`` env > this argument — dispatch
+            rule 9).  ``"compensated"`` contracts fp32 inputs on the fp16
+            engine via exact Ozaki high/low splits and matches
+            ``method="vector"`` within the documented ulp bound; ``"fast"``
+            feeds the bf16 engine (loose bound).  Only fp32 inputs are
+            affected; integer scans stay exact.  Explicitly combining a
+            non-default precision with ``method="vector"`` raises.
         variant: Tile algebra, ``"scanu"`` (Alg. 1, VPU row propagation) or
             ``"scanul1"`` (Alg. 2 / Eq. 1, propagation as an ``L⁻`` matmul).
         tile_s: Tile side ``s`` (a tile covers ``s²`` elements; 128 = MXU size).
@@ -311,7 +332,9 @@ def scan(
         The scanned array, same shape as ``x``, in the accumulation dtype.
 
     Raises:
-        ValueError: If ``method`` or ``variant`` is unknown.
+        ValueError: If ``method``, ``precision`` or ``variant`` is unknown, or
+            an explicit non-default ``precision`` is combined with an explicit
+            ``method="vector"``.
 
     Example:
         >>> import jax.numpy as jnp
@@ -331,7 +354,10 @@ def scan(
     acc = jnp.dtype(accum_dtype) if accum_dtype is not None else accum_dtype_for(x.dtype)
 
     axis = axis % x.ndim
+    explicit_method = method != "auto"
     method = maybe_resolve(method, "scan", x.shape[axis], x.dtype)
+    precision = resolve_precision(precision, method=method,
+                                  explicit_method=explicit_method)
     if axis != x.ndim - 1:
         x = jnp.moveaxis(x, axis, -1)
     if reverse:
@@ -341,13 +367,15 @@ def scan(
         out = jnp.cumsum(x, axis=-1, dtype=acc)
     elif method == "kernel":
         from repro.kernels import ops as _kops  # local import to avoid cycle
-        out = _kops.scan_kernel(x, s=tile_s, variant=variant, accum_dtype=acc)
+        out = _kops.scan_kernel(x, s=tile_s, variant=variant, accum_dtype=acc,
+                                precision=precision)
     elif method == "blocked":
         from repro.kernels import ops as _kops  # local import to avoid cycle
         out = _kops.blocked_scan_kernel(x, s=tile_s, block_tiles=block_tiles,
-                                        variant=variant, accum_dtype=acc)
+                                        variant=variant, accum_dtype=acc,
+                                        precision=precision)
     else:
-        out = _scan_last_axis_matmul(x, tile_s, variant, acc)
+        out = _scan_last_axis_matmul(x, tile_s, variant, acc, precision)
 
     if exclusive:
         pad = [(0, 0)] * (out.ndim - 1) + [(1, 0)]

@@ -44,6 +44,7 @@ import numpy as np
 
 from repro.core.autotune import maybe_resolve
 from repro.core.linrec import linear_scan, linrec_accum_dtype_for
+from repro.core.precision import resolve_precision
 from repro.core.primitives import _encode_for_sort, _register, dispatch
 from repro.core.scan import accum_dtype_for, scan
 
@@ -240,7 +241,7 @@ def _segment_ends(per_element: jax.Array, offsets: jax.Array) -> jax.Array:
 
 @_register("segment_scan", "matmul", "vector")
 def _segment_scan_unfused(values, offsets, *, method, tile_s, block_tiles,
-                          accum_dtype):
+                          accum_dtype, precision="highest"):
     """Full unsegmented scan, then subtract the value at each segment start.
 
     ``seg[i] = scan(values)[i] - scan(values)[start(i) - 1]`` — the
@@ -251,7 +252,7 @@ def _segment_scan_unfused(values, offsets, *, method, tile_s, block_tiles,
     acc = jnp.dtype(accum_dtype) if accum_dtype is not None \
         else accum_dtype_for(values.dtype)
     full = scan(values, axis=-1, method=method, tile_s=tile_s,
-                block_tiles=block_tiles, accum_dtype=acc)
+                block_tiles=block_tiles, accum_dtype=acc, precision=precision)
     n = values.shape[-1]
     ids = segment_ids(offsets, n)
     starts = jnp.take(offsets, ids)
@@ -261,29 +262,30 @@ def _segment_scan_unfused(values, offsets, *, method, tile_s, block_tiles,
 
 @_register("segment_scan", "kernel")
 def _segment_scan_fused(values, offsets, *, method, tile_s, block_tiles,
-                        accum_dtype):
+                        accum_dtype, precision="highest"):
     """Fused sequential-grid segmented kernel (one launch per batch row)."""
     from repro.kernels import ops as _kops
     flags = boundary_flags(offsets, values.shape[-1])
     return _kops.seg_scan_kernel(values, flags, s=tile_s,
-                                 accum_dtype=accum_dtype)
+                                 accum_dtype=accum_dtype, precision=precision)
 
 
 @_register("segment_scan", "blocked")
 def _segment_scan_blocked(values, offsets, *, method, tile_s, block_tiles,
-                          accum_dtype):
+                          accum_dtype, precision="highest"):
     """§4 blocked pipeline with the segmented phase-2 carry scan."""
     from repro.kernels import ops as _kops
     flags = boundary_flags(offsets, values.shape[-1])
     return _kops.seg_blocked_scan_kernel(values, flags, s=tile_s,
                                          block_tiles=block_tiles,
-                                         accum_dtype=accum_dtype)
+                                         accum_dtype=accum_dtype,
+                                         precision=precision)
 
 
 def segment_scan(values, offsets=None, *, exclusive: bool = False,
                  reverse: bool = False, method: str = "auto",
                  tile_s: int = 128, block_tiles: int = 8,
-                 accum_dtype=None) -> jax.Array:
+                 accum_dtype=None, precision: str = "highest") -> jax.Array:
     """Per-segment prefix sum of a packed batch — the carry resets at boundaries.
 
     The segmented analogue of :func:`repro.core.scan.scan`: same ``method=``
@@ -303,10 +305,18 @@ def segment_scan(values, offsets=None, *, exclusive: bool = False,
         tile_s: Tile side ``s`` for the matmul scans.
         block_tiles: Tiles per block for ``method="blocked"``.
         accum_dtype: Accumulation dtype override.
+        precision: Engine precision for the masked contractions —
+            ``"highest"`` (default), ``"compensated"`` or ``"fast"``; see
+            :mod:`repro.core.precision` (dispatch rule 9).  Integer mask
+            scans stay exact under every precision.
 
     Returns:
         The per-segment scanned array, same shape as ``values``, in the
         accumulation dtype.
+
+    Raises:
+        ValueError: If an explicit non-default ``precision`` is combined
+            with an explicit ``method="vector"``.
 
     Example:
         >>> import jax.numpy as jnp
@@ -318,7 +328,10 @@ def segment_scan(values, offsets=None, *, exclusive: bool = False,
     """
     values, offsets = _unwrap(values, offsets)
     n = values.shape[-1]
+    explicit_method = method != "auto"
     method = maybe_resolve(method, "segment_scan", n, values.dtype)
+    precision = resolve_precision(precision, method=method,
+                                  explicit_method=explicit_method)
     acc = jnp.dtype(accum_dtype) if accum_dtype is not None \
         else accum_dtype_for(values.dtype)
     if n == 0:
@@ -327,11 +340,13 @@ def segment_scan(values, offsets=None, *, exclusive: bool = False,
         rev_off = (n - offsets)[::-1]
         out = segment_scan(jnp.flip(values, axis=-1), rev_off,
                            exclusive=exclusive, method=method, tile_s=tile_s,
-                           block_tiles=block_tiles, accum_dtype=accum_dtype)
+                           block_tiles=block_tiles, accum_dtype=accum_dtype,
+                           precision=precision)
         return jnp.flip(out, axis=-1)
     out = dispatch("segment_scan", method)(
         values, offsets, method=method, tile_s=tile_s,
-        block_tiles=block_tiles, accum_dtype=accum_dtype)
+        block_tiles=block_tiles, accum_dtype=accum_dtype,
+        precision=precision)
     if exclusive:
         pad = [(0, 0)] * (out.ndim - 1) + [(1, 0)]
         shifted = jnp.pad(out, pad)[..., :-1]
@@ -363,7 +378,8 @@ def segment_cumsum(values, offsets=None, **kw) -> jax.Array:
 def segment_linear_scan(a, b, offsets=None, *, exclusive: bool = False,
                         reverse: bool = False, method: str = "auto",
                         initial=0.0, tile_s: int = 128, block_tiles: int = 8,
-                        accum_dtype=None) -> jax.Array:
+                        accum_dtype=None,
+                        precision: str = "highest") -> jax.Array:
     """Per-segment linear recurrence ``y_t = a_t * y_{t-1} + b_t`` of a packed batch.
 
     The segmented analogue of :func:`repro.core.linrec.linear_scan`: at every
@@ -393,10 +409,16 @@ def segment_linear_scan(a, b, offsets=None, *, exclusive: bool = False,
         tile_s: Tile side for the matmul scans.
         block_tiles: Tiles per block for ``method="blocked"``.
         accum_dtype: Accumulation dtype override.
+        precision: Engine precision, forwarded to the underlying
+            :func:`repro.core.linrec.linear_scan` (dispatch rule 9).
 
     Returns:
         The per-segment recurrence, broadcast shape of ``a``/``b``, in the
         linrec accumulation dtype.
+
+    Raises:
+        ValueError: If an explicit non-default ``precision`` is combined
+            with an explicit ``method="vector"``.
 
     Example:
         >>> import jax.numpy as jnp
@@ -413,8 +435,11 @@ def segment_linear_scan(a, b, offsets=None, *, exclusive: bool = False,
     a = jnp.broadcast_to(a, shp)
     b = jnp.broadcast_to(b, shp)
     n = a.shape[-1]
+    explicit_method = method != "auto"
     method = maybe_resolve(method, "segment_linear_scan", n,
                            jnp.result_type(a.dtype, b.dtype))
+    precision = resolve_precision(precision, method=method,
+                                  explicit_method=explicit_method)
     acc = jnp.dtype(accum_dtype) if accum_dtype is not None \
         else linrec_accum_dtype_for(jnp.result_type(a.dtype, b.dtype))
     if n == 0:
@@ -424,7 +449,8 @@ def segment_linear_scan(a, b, offsets=None, *, exclusive: bool = False,
         out = segment_linear_scan(
             jnp.flip(a, axis=-1), jnp.flip(b, axis=-1), rev_off,
             exclusive=exclusive, method=method, initial=initial,
-            tile_s=tile_s, block_tiles=block_tiles, accum_dtype=accum_dtype)
+            tile_s=tile_s, block_tiles=block_tiles, accum_dtype=accum_dtype,
+            precision=precision)
         return jnp.flip(out, axis=-1)
     flags = boundary_flags(offsets, n) > 0
     init = jnp.asarray(initial, acc)
@@ -435,7 +461,8 @@ def segment_linear_scan(a, b, offsets=None, *, exclusive: bool = False,
     b_cut = jnp.where(flags, b.astype(acc) + a.astype(acc) * init_e,
                       b.astype(acc))
     out = linear_scan(a_cut, b_cut, method=method, tile_s=tile_s,
-                      block_tiles=block_tiles, accum_dtype=acc)
+                      block_tiles=block_tiles, accum_dtype=acc,
+                      precision=precision)
     if exclusive:
         pad = [(0, 0)] * (out.ndim - 1) + [(1, 0)]
         shifted = jnp.pad(out, pad)[..., :-1]
@@ -445,7 +472,7 @@ def segment_linear_scan(a, b, offsets=None, *, exclusive: bool = False,
 
 def segment_sums(values, offsets=None, *, method: str = "auto",
                  tile_s: int = 128, block_tiles: int = 8,
-                 accum_dtype=None) -> jax.Array:
+                 accum_dtype=None, precision: str = "highest") -> jax.Array:
     """Per-segment totals, read off the inclusive segmented scan's last element.
 
     Args:
@@ -455,6 +482,7 @@ def segment_sums(values, offsets=None, *, method: str = "auto",
         tile_s: Tile side for the matmul scans.
         block_tiles: Tiles per block for ``method="blocked"``.
         accum_dtype: Accumulation dtype override.
+        precision: Engine precision, forwarded to :func:`segment_scan`.
 
     Returns:
         ``(..., num_segments)`` totals in the accumulation dtype (0 for empty
@@ -467,7 +495,8 @@ def segment_sums(values, offsets=None, *, method: str = "auto",
     """
     values, offsets = _unwrap(values, offsets)
     inc = segment_scan(values, offsets, method=method, tile_s=tile_s,
-                       block_tiles=block_tiles, accum_dtype=accum_dtype)
+                       block_tiles=block_tiles, accum_dtype=accum_dtype,
+                       precision=precision)
     return _segment_ends(inc, offsets)
 
 

@@ -52,10 +52,17 @@ def ssd_scan(
     *,
     chunk: int = 128,
     scan_method: str = "auto",
+    precision: str = "highest",
     initial_state: Optional[jax.Array] = None,   # (B, H, N, P)
     return_final_state: bool = False,
 ):
-    """Chunked SSD scan.  Returns y (B,S,H,P) [and final state (B,H,N,P)]."""
+    """Chunked SSD scan.  Returns y (B,S,H,P) [and final state (B,H,N,P)].
+
+    ``precision`` (dispatch rule 9) rides into the two scan-shaped phases —
+    the log-decay cumsum and the cross-chunk ``linear_scan`` — which resolve
+    it against ``scan_method`` exactly as their direct callers would; the
+    dense within-chunk einsums always contract in fp32.
+    """
     bsz, s, h, p = x.shape
     q = min(chunk, s)
     pad = (-s) % q
@@ -71,7 +78,8 @@ def ssd_scan(
 
     # cumsum of log-decays — with the paper's matmul scan (this is literally a
     # prefix sum on the MXU).
-    cs = mm_scan(ac.astype(jnp.float32), axis=-1, method=scan_method)   # (B,nc,H,Q)
+    cs = mm_scan(ac.astype(jnp.float32), axis=-1, method=scan_method,
+                 precision=precision)                   # (B,nc,H,Q)
 
     # Within-chunk decay matrix L[i,j] = exp(cs_i - cs_j), i >= j.  Mask BEFORE the
     # exp: for i<j the difference is positive and can overflow, and inf in the dead
@@ -100,7 +108,7 @@ def ssd_scan(
     nc = d_c.shape[1]
     s_inc = linear_scan(d_c[..., None, None], s_c, axis=1,
                         method=scan_method, initial=init,
-                        tile_s=min(128, max(2, nc)))
+                        tile_s=min(128, max(2, nc)), precision=precision)
     # State entering chunk c = inclusive state after chunk c-1 (shift right;
     # the first chunk enters with the initial state, if any).
     h0 = (init[:, None] if init is not None
@@ -158,7 +166,8 @@ def ssd_scan_ref(x, a_log, b_mat, c_mat, *, initial_state=None,
 
 def mlstm_chunked(q: jax.Array, k: jax.Array, v: jax.Array,
                   i_pre: jax.Array, f_pre: jax.Array, *,
-                  chunk: int = 128, scan_method: str = "auto") -> jax.Array:
+                  chunk: int = 128, scan_method: str = "auto",
+                  precision: str = "highest") -> jax.Array:
     """q,k,v: (B,S,H,D); i_pre,f_pre: (B,S,H).  Returns (B,S,H,D)."""
     d = q.shape[-1]
     f_log = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
@@ -167,10 +176,12 @@ def mlstm_chunked(q: jax.Array, k: jax.Array, v: jax.Array,
     qs = q.astype(jnp.float32) / jnp.sqrt(d)
     # numerator: SSD scan with x = gain * v, B = k, C = q
     num = ssd_scan(v.astype(jnp.float32) * gain[..., None], f_log,
-                   k.astype(jnp.float32), qs, chunk=chunk, scan_method=scan_method)
+                   k.astype(jnp.float32), qs, chunk=chunk,
+                   scan_method=scan_method, precision=precision)
     # normaliser: same recurrence with x = gain (P = 1)
     den = ssd_scan(gain[..., None], f_log, k.astype(jnp.float32), qs,
-                   chunk=chunk, scan_method=scan_method)[..., 0]
+                   chunk=chunk, scan_method=scan_method,
+                   precision=precision)[..., 0]
     h = num / (jnp.abs(den) + 1e-6)[..., None]
     return h.astype(q.dtype)
 

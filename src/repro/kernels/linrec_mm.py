@@ -14,7 +14,9 @@ shapes as the prefix-scan kernels:
 * the §4 blocked pipeline (:func:`linrec_blocked_scan`): phase 1 reduces each
   block to its affine summary ``(Π a, trailing affine sum)`` with cheap
   suffix-product dot products (no ``W`` contraction — the vector-unit
-  recompute of the paper), phase 2 scans the ``nb`` summaries under affine
+  recompute of the paper, and therefore precision-neutral: only the phase-2
+  carry scan and the fused phase-1+3 contractions honour ``precision=``),
+  phase 2 scans the ``nb`` summaries under affine
   composition (one weighted-triangular contraction per batch row), and fused
   phases 1+3 rerun the block algebra once with the carry folded in, so every
   element is read from HBM once and written once.
@@ -66,7 +68,7 @@ def _to_rows(a, b, n):
 # ---------------------------------------------------------------------------
 
 
-def _tile_kernel(a_ref, b_ref, o_ref, carry_ref, *, acc):
+def _tile_kernel(a_ref, b_ref, o_ref, carry_ref, *, acc, precision):
     t = pl.program_id(1)
 
     @pl.when(t == 0)
@@ -75,15 +77,15 @@ def _tile_kernel(a_ref, b_ref, o_ref, carry_ref, *, acc):
 
     a = a_ref[0, 0]                            # (s, s) tile in VMEM
     b = b_ref[0, 0]
-    out, mult = _linrec_block(a, b, acc)
+    out, mult = _linrec_block(a, b, acc, precision)
     out = out + mult * carry_ref[0, 0]
     carry_ref[0, 0] = out[-1, -1]
     o_ref[0, 0] = out
 
 
 def linrec_scan_tiles(a: jax.Array, b: jax.Array, *, s: int = 128,
-                      accum_dtype=None,
-                      interpret: bool | None = None) -> jax.Array:
+                      accum_dtype=None, interpret: bool | None = None,
+                      precision: str = "highest") -> jax.Array:
     """Linear recurrence over the last axis in one sequential-grid launch.
 
     ``a``/``b``: ``(..., n)`` (already broadcast to a common shape by
@@ -107,7 +109,7 @@ def linrec_scan_tiles(a: jax.Array, b: jax.Array, *, s: int = 128,
     btiles = bb.reshape(rows, nt, s, s)
     spec = pl.BlockSpec((1, 1, s, s), lambda i, j: (i, j, 0, 0))
     out = pl.pallas_call(
-        functools.partial(_tile_kernel, acc=acc),
+        functools.partial(_tile_kernel, acc=acc, precision=precision),
         grid=(rows, nt),
         in_specs=[spec, spec],
         out_specs=spec,
@@ -174,19 +176,20 @@ def linrec_block_summaries(ablocks: jax.Array, bblocks: jax.Array, *,
     )(ablocks, bblocks)
 
 
-def _carry_kernel(p_ref, l_ref, o_ref, *, acc):
+def _carry_kernel(p_ref, l_ref, o_ref, *, acc, precision):
     p = p_ref[0, :]
     lv = l_ref[0, :]
     # inclusive affine scan of the summaries; the chunked form keeps every
     # in-register window inside the exponent-normalized range even when the
     # block count exceeds MAX_TILE
     inc = _linrec_matmul(p, lv, method="matmul", tile_s=128, block_tiles=0,
-                         accum_dtype=acc)
+                         accum_dtype=acc, precision=precision)
     o_ref[0, :] = jnp.concatenate([jnp.zeros((1,), acc), inc[:-1]])
 
 
 def linrec_carry_scan(prods: jax.Array, lasts: jax.Array, *,
-                      interpret: bool | None = None) -> jax.Array:
+                      interpret: bool | None = None,
+                      precision: str = "highest") -> jax.Array:
     """Phase 2: exclusive scan of the block summaries under affine composition.
 
     ``carry_in[c] = Σ_{q<c} l_q · Π_{r=q+1..c-1} p_r`` — the state entering
@@ -198,7 +201,7 @@ def linrec_carry_scan(prods: jax.Array, lasts: jax.Array, *,
     rows, nb = prods.shape
     acc = prods.dtype
     return pl.pallas_call(
-        functools.partial(_carry_kernel, acc=acc),
+        functools.partial(_carry_kernel, acc=acc, precision=precision),
         grid=(rows,),
         in_specs=[pl.BlockSpec((1, nb), lambda i: (i, 0)),
                   pl.BlockSpec((1, nb), lambda i: (i, 0))],
@@ -209,16 +212,17 @@ def linrec_carry_scan(prods: jax.Array, lasts: jax.Array, *,
     )(prods, lasts)
 
 
-def _block_carry_kernel(a_ref, b_ref, c_ref, o_ref, *, acc):
+def _block_carry_kernel(a_ref, b_ref, c_ref, o_ref, *, acc, precision):
     a = a_ref[0, 0]
     b = b_ref[0, 0]
-    out, mult = _linrec_block(a, b, acc)
+    out, mult = _linrec_block(a, b, acc, precision)
     o_ref[0, 0] = out + mult * c_ref[0, 0]
 
 
 def linrec_block_scan_carry(ablocks: jax.Array, bblocks: jax.Array,
                             carries: jax.Array, *, accum_dtype=None,
-                            interpret: bool | None = None) -> jax.Array:
+                            interpret: bool | None = None,
+                            precision: str = "highest") -> jax.Array:
     """Fused phases 1+3: block-local recurrence + carry fold, one read/write.
 
     Each grid step reads its block once, runs the weighted-triangular block
@@ -233,7 +237,7 @@ def linrec_block_scan_carry(ablocks: jax.Array, bblocks: jax.Array,
         else linrec_accum_dtype_for(jnp.result_type(ablocks.dtype, bblocks.dtype))
     spec = pl.BlockSpec((1, 1, m, s), lambda i, j: (i, j, 0, 0))
     return pl.pallas_call(
-        functools.partial(_block_carry_kernel, acc=acc),
+        functools.partial(_block_carry_kernel, acc=acc, precision=precision),
         grid=(rows, nb),
         in_specs=[spec, spec, pl.BlockSpec((1, 1), lambda i, j: (i, j))],
         out_specs=spec,
@@ -245,7 +249,8 @@ def linrec_block_scan_carry(ablocks: jax.Array, bblocks: jax.Array,
 
 def linrec_blocked_scan(a: jax.Array, b: jax.Array, *, s: int = 128,
                         block_tiles: int = 8, accum_dtype=None,
-                        interpret: bool | None = None) -> jax.Array:
+                        interpret: bool | None = None,
+                        precision: str = "highest") -> jax.Array:
     """Linear recurrence over the last axis with the three-phase blocked pipeline.
 
     Same decomposition as ``scan_pipeline.blocked_scan``: phase 1 computes the
@@ -277,8 +282,9 @@ def linrec_blocked_scan(a: jax.Array, b: jax.Array, *, s: int = 128,
         prods, lasts = linrec_block_summaries(ablocks, bblocks,
                                               accum_dtype=acc,
                                               interpret=interpret)
-        carries = linrec_carry_scan(prods, lasts, interpret=interpret)
+        carries = linrec_carry_scan(prods, lasts, interpret=interpret,
+                                    precision=precision)
     out = linrec_block_scan_carry(ablocks, bblocks, carries, accum_dtype=acc,
-                                  interpret=interpret)
+                                  interpret=interpret, precision=precision)
     out = out.reshape(rows, nb * block_len)[:, :n]
     return out.reshape(*lead, n) if lead else out[0]

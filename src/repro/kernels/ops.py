@@ -25,59 +25,73 @@ __all__ = ["scan_kernel", "blocked_scan_kernel", "ssd_kernel", "split_kernel",
            "linrec_blocked_kernel"]
 
 
-@functools.partial(jax.jit, static_argnames=("s", "variant", "accum_dtype", "interpret"))
+@functools.partial(jax.jit, static_argnames=("s", "variant", "accum_dtype",
+                                             "interpret", "precision"))
 def scan_kernel(x: jax.Array, *, s: int = 128, variant: str = "scanul1",
-                accum_dtype=None, interpret: bool | None = None) -> jax.Array:
+                accum_dtype=None, interpret: bool | None = None,
+                precision: str = "highest") -> jax.Array:
     """Fused matmul-scan over the last axis (ScanU/ScanUL1, paper Alg. 1/2)."""
     return scan_tiles(x, s=s, variant=variant, accum_dtype=accum_dtype,
-                      interpret=interpret)
+                      interpret=interpret, precision=precision)
 
 
 @functools.partial(jax.jit, static_argnames=("s", "block_tiles", "variant",
-                                             "accum_dtype", "interpret"))
+                                             "accum_dtype", "interpret",
+                                             "precision"))
 def blocked_scan_kernel(x: jax.Array, *, s: int = 128, block_tiles: int = 8,
                         variant: str = "scanul1", accum_dtype=None,
-                        interpret: bool | None = None) -> jax.Array:
+                        interpret: bool | None = None,
+                        precision: str = "highest") -> jax.Array:
     """Three-phase blocked scan pipeline (paper §4 MCScan, one device)."""
     return blocked_scan(x, s=s, block_tiles=block_tiles, variant=variant,
-                        accum_dtype=accum_dtype, interpret=interpret)
+                        accum_dtype=accum_dtype, interpret=interpret,
+                        precision=precision)
 
 
-@functools.partial(jax.jit, static_argnames=("s", "accum_dtype", "interpret"))
+@functools.partial(jax.jit, static_argnames=("s", "accum_dtype", "interpret",
+                                             "precision"))
 def seg_scan_kernel(x: jax.Array, flags: jax.Array, *, s: int = 128,
-                    accum_dtype=None,
-                    interpret: bool | None = None) -> jax.Array:
+                    accum_dtype=None, interpret: bool | None = None,
+                    precision: str = "highest") -> jax.Array:
     """Fused segmented matmul scan: carry resets at flagged boundaries."""
     return seg_scan_tiles(x, flags, s=s, accum_dtype=accum_dtype,
-                          interpret=interpret)
+                          interpret=interpret, precision=precision)
 
 
 @functools.partial(jax.jit, static_argnames=("s", "block_tiles",
-                                             "accum_dtype", "interpret"))
+                                             "accum_dtype", "interpret",
+                                             "precision"))
 def seg_blocked_scan_kernel(x: jax.Array, flags: jax.Array, *, s: int = 128,
                             block_tiles: int = 8, accum_dtype=None,
-                            interpret: bool | None = None) -> jax.Array:
+                            interpret: bool | None = None,
+                            precision: str = "highest") -> jax.Array:
     """§4 blocked pipeline with a segmented phase-2 carry scan."""
     return seg_blocked_scan(x, flags, s=s, block_tiles=block_tiles,
-                            accum_dtype=accum_dtype, interpret=interpret)
+                            accum_dtype=accum_dtype, interpret=interpret,
+                            precision=precision)
 
 
-@functools.partial(jax.jit, static_argnames=("s", "accum_dtype", "interpret"))
+@functools.partial(jax.jit, static_argnames=("s", "accum_dtype", "interpret",
+                                             "precision"))
 def linrec_kernel(a: jax.Array, b: jax.Array, *, s: int = 128,
-                  accum_dtype=None, interpret: bool | None = None) -> jax.Array:
+                  accum_dtype=None, interpret: bool | None = None,
+                  precision: str = "highest") -> jax.Array:
     """Fused linear-recurrence tile scan (running state carried in SMEM)."""
     return linrec_scan_tiles(a, b, s=s, accum_dtype=accum_dtype,
-                             interpret=interpret)
+                             interpret=interpret, precision=precision)
 
 
 @functools.partial(jax.jit, static_argnames=("s", "block_tiles",
-                                             "accum_dtype", "interpret"))
+                                             "accum_dtype", "interpret",
+                                             "precision"))
 def linrec_blocked_kernel(a: jax.Array, b: jax.Array, *, s: int = 128,
                           block_tiles: int = 8, accum_dtype=None,
-                          interpret: bool | None = None) -> jax.Array:
+                          interpret: bool | None = None,
+                          precision: str = "highest") -> jax.Array:
     """§4 blocked pipeline with an affine phase-2 carry scan."""
     return linrec_blocked_scan(a, b, s=s, block_tiles=block_tiles,
-                               accum_dtype=accum_dtype, interpret=interpret)
+                               accum_dtype=accum_dtype, interpret=interpret,
+                               precision=precision)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

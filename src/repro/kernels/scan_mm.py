@@ -23,12 +23,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.precision import pdot
 from repro.core.scan import accum_dtype_for
 
 __all__ = ["scan_tiles", "scan_mm_kernel"]
 
 
-def _kernel(x_ref, o_ref, carry_ref, *, variant: str, acc):
+def _kernel(x_ref, o_ref, carry_ref, *, variant: str, acc, precision: str):
     t = pl.program_id(1)
 
     @pl.when(t == 0)
@@ -46,16 +47,16 @@ def _kernel(x_ref, o_ref, carry_ref, *, variant: str, acc):
     if variant == "scanul1":
         # Paper Eq. 1 — all three products on the MXU, C2 accumulated in place
         # (the L0C accumulation-buffer step of Alg. 2 line 12).
-        c2 = jnp.dot(a, u, preferred_element_type=acc)
+        c2 = pdot(a, u, acc=acc, precision=precision, exact="right")
         ones = jnp.ones((s, s), dtype=a.dtype)
-        c1 = jnp.dot(a, ones, preferred_element_type=acc)
+        c1 = pdot(a, ones, acc=acc, precision=precision, exact="right")
         lm = (ri > ci).astype(acc)                    # L⁻_s
-        c2 = c2 + jnp.dot(lm, c1, preferred_element_type=acc)
+        c2 = c2 + pdot(lm, c1, acc=acc, precision=precision, exact="left")
         local = c2
     else:  # scanu
         # Alg. 1: one matmul for the s row-local scans; propagation of the row
         # partials on the VPU (log-depth cumsum; Ascend used a serial vector loop).
-        local = jnp.dot(a, u, preferred_element_type=acc)
+        local = pdot(a, u, acc=acc, precision=precision, exact="right")
         row_sums = local[:, -1]
         row_prefix = jnp.cumsum(row_sums, axis=0) - row_sums
         local = local + row_prefix[:, None]
@@ -64,8 +65,10 @@ def _kernel(x_ref, o_ref, carry_ref, *, variant: str, acc):
     o_ref[0, 0] = out
 
 
-def scan_mm_kernel(variant: str, acc, s: int, interpret: bool):
-    kern = functools.partial(_kernel, variant=variant, acc=acc)
+def scan_mm_kernel(variant: str, acc, s: int, interpret: bool,
+                   precision: str = "highest"):
+    kern = functools.partial(_kernel, variant=variant, acc=acc,
+                             precision=precision)
 
     def call(tiles: jax.Array) -> jax.Array:
         b, nt = tiles.shape[0], tiles.shape[1]
@@ -86,7 +89,8 @@ def scan_mm_kernel(variant: str, acc, s: int, interpret: bool):
 
 
 def scan_tiles(x: jax.Array, *, s: int = 128, variant: str = "scanul1",
-               accum_dtype=None, interpret: bool | None = None) -> jax.Array:
+               accum_dtype=None, interpret: bool | None = None,
+               precision: str = "highest") -> jax.Array:
     """Scan the last axis of ``x`` (any leading batch dims) with the fused kernel."""
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
@@ -100,6 +104,6 @@ def scan_tiles(x: jax.Array, *, s: int = 128, variant: str = "scanul1",
         xb = jnp.pad(xb, ((0, 0), (0, pad)))
     nt = xb.shape[-1] // ell
     tiles = xb.reshape(b, nt, s, s)
-    out = scan_mm_kernel(variant, acc, s, interpret)(tiles)
+    out = scan_mm_kernel(variant, acc, s, interpret, precision)(tiles)
     out = out.reshape(b, nt * ell)[:, :n]
     return out.reshape(*lead, n) if lead else out[0]

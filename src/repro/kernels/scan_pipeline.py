@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.precision import pdot
 from repro.core.scan import _operand_dtype, accum_dtype_for
 
 __all__ = ["blocked_scan", "block_partial_sums", "carry_scan", "block_scan_carry"]
@@ -139,34 +140,35 @@ def _upper_ones_in_register(s: int, dtype):
     return (ri <= ci).astype(dtype)
 
 
-def _block_scan_scanu_kernel(x_ref, c_ref, o_ref, *, acc):
+def _block_scan_scanu_kernel(x_ref, c_ref, o_ref, *, acc, precision):
     a = x_ref[0, 0]                                        # (m, s) block view
     u = _upper_ones_in_register(a.shape[-1], a.dtype)
-    local = jnp.dot(a, u, preferred_element_type=acc).astype(acc)
+    local = pdot(a, u, acc=acc, precision=precision, exact="right").astype(acc)
     row_sums = local[:, -1]                                # == A @ 1_s
     row_prefix = jnp.cumsum(row_sums, axis=0) - row_sums   # exclusive, VPU
     o_ref[0, 0] = local + row_prefix[:, None] + c_ref[0, 0]
 
 
-def _block_scan_scanul1_kernel(x_ref, c_ref, o_ref, *, acc):
+def _block_scan_scanul1_kernel(x_ref, c_ref, o_ref, *, acc, precision):
     a = x_ref[0, 0]
     m = a.shape[0]
     u = _upper_ones_in_register(a.shape[-1], a.dtype)
-    local = jnp.dot(a, u, preferred_element_type=acc).astype(acc)
+    local = pdot(a, u, acc=acc, precision=precision, exact="right").astype(acc)
     row_sums = local[:, -1]
     # Paper Eq. 1 on the rectangular block: L⁻_m @ (A @ 1_s) on the MXU;
     # L⁻_m is likewise built in-register (strict lower triangle of ones).
     ri = jax.lax.broadcasted_iota(jnp.int32, (m, m), 0)
     ci = jax.lax.broadcasted_iota(jnp.int32, (m, m), 1)
     lm = (ri > ci).astype(acc)
-    row_prefix = jnp.dot(lm, row_sums[:, None],
-                         preferred_element_type=acc)[:, 0]
+    row_prefix = pdot(lm, row_sums[:, None], acc=acc, precision=precision,
+                      exact="left")[:, 0]
     o_ref[0, 0] = local + row_prefix[:, None] + c_ref[0, 0]
 
 
 def block_scan_carry(blocks: jax.Array, carries: jax.Array, *,
                      variant: str = "scanul1", accum_dtype=None,
-                     interpret: bool | None = None) -> jax.Array:
+                     interpret: bool | None = None,
+                     precision: str = "highest") -> jax.Array:
     """Fused phases 1+3: matmul partial scan of each block + carry add.
 
     ``blocks``: ``(b, nb, m, s)`` row-major block views; ``carries``: ``(b,
@@ -183,9 +185,11 @@ def block_scan_carry(blocks: jax.Array, carries: jax.Array, *,
     block_spec = pl.BlockSpec((1, 1, m, s), lambda i, j: (i, j, 0, 0))
     carry_spec = pl.BlockSpec((1, 1), lambda i, j: (i, j))
     if variant == "scanul1":
-        kern = functools.partial(_block_scan_scanul1_kernel, acc=acc)
+        kern = functools.partial(_block_scan_scanul1_kernel, acc=acc,
+                                 precision=precision)
     elif variant == "scanu":
-        kern = functools.partial(_block_scan_scanu_kernel, acc=acc)
+        kern = functools.partial(_block_scan_scanu_kernel, acc=acc,
+                                 precision=precision)
     else:
         raise ValueError(f"unknown scan variant {variant!r}")
     # U_s / L⁻_m are built in-register inside the kernels from iota
@@ -209,7 +213,8 @@ def block_scan_carry(blocks: jax.Array, carries: jax.Array, *,
 
 def blocked_scan(x: jax.Array, *, s: int = 128, block_tiles: int = 8,
                  variant: str = "scanul1", accum_dtype=None,
-                 interpret: bool | None = None) -> jax.Array:
+                 interpret: bool | None = None,
+                 precision: str = "highest") -> jax.Array:
     """Scan the last axis of ``x`` with the three-phase blocked pipeline.
 
     ``x``: ``(..., n)`` for any ``n >= 1`` (ragged tails are zero-padded to a
@@ -247,6 +252,6 @@ def blocked_scan(x: jax.Array, *, s: int = 128, block_tiles: int = 8,
         sums = block_partial_sums(blocks, accum_dtype=acc, interpret=interpret)
         carries = carry_scan(sums, interpret=interpret)
     out = block_scan_carry(blocks, carries, variant=variant, accum_dtype=acc,
-                           interpret=interpret)
+                           interpret=interpret, precision=precision)
     out = out.reshape(b, nb * block_len)[:, :n]
     return out.reshape(*lead, n) if lead else out[0]

@@ -41,6 +41,13 @@ require Mosaic dynamic-gather support.
 
 dtype rules follow ``accum_dtype_for``: int8/bool flags and values accumulate
 in int32 (the paper's mask-scan specialization), bf16/f16 in fp32.
+
+Every boundary-masked contraction goes through :func:`repro.core.precision.pdot`
+— the masked triangular operands stay exact 0/1 matrices under fp16/bf16, so
+``precision="compensated"``/``"fast"`` apply to segmented scans with the same
+ulp contract as the unsegmented kernels (integer mask scans stay exact
+unconditionally; only the start-column *gather* path subtracts two compensated
+products, which the ulp oracle covers).
 """
 from __future__ import annotations
 
@@ -51,6 +58,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.precision import pdot
 from repro.core.scan import _operand_dtype, accum_dtype_for
 
 __all__ = ["seg_scan_tiles", "seg_blocked_scan", "seg_block_summaries",
@@ -79,7 +87,8 @@ def _row_starts(f32: jax.Array) -> jax.Array:
     return jax.lax.cummax(jnp.where(f32 > 0, pos, 0), axis=1)
 
 
-def _seg_rows_masked(a: jax.Array, startc: jax.Array, acc) -> jax.Array:
+def _seg_rows_masked(a: jax.Array, startc: jax.Array, acc,
+                     precision: str = "highest") -> jax.Array:
     """Row-local segmented scans via the flag-masked ``A @ U_s`` contraction.
 
     ``mask[r, i, j] = (start[r, j] <= i <= j)`` folds the boundary flags into
@@ -94,13 +103,15 @@ def _seg_rows_masked(a: jax.Array, startc: jax.Array, acc) -> jax.Array:
     tri = ri <= cj                                     # U_s, in-register
     mseg = (tri[None, :, :] & (ri[None, :, :] >= startc[:, None, :]))
     mseg = mseg.astype(a.dtype)
-    local = jax.lax.dot_general(
-        a[:, None, :], mseg, (((2,), (1,)), ((0,), (0,))),
-        preferred_element_type=acc)
+    # Batched matmul over the row dimension — the per-row masked U_s operand
+    # is still an exact 0/1 matrix, so pdot's "right" split applies per row.
+    local = pdot(a[:, None, :], mseg, acc=acc, precision=precision,
+                 exact="right")
     return local[:, 0, :].astype(acc)
 
 
-def _seg_rows_gather(a: jax.Array, startc: jax.Array, acc) -> jax.Array:
+def _seg_rows_gather(a: jax.Array, startc: jax.Array, acc,
+                     precision: str = "highest") -> jax.Array:
     """Row-local segmented scans via ``A @ U_s`` + a start-column gather.
 
     ``local_seg[r, j] = (A @ U_s)[r, j] - exclusive(A @ U_s)[r, start[r, j]]``
@@ -113,13 +124,15 @@ def _seg_rows_gather(a: jax.Array, startc: jax.Array, acc) -> jax.Array:
     ri = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
     cj = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
     u = (ri <= cj).astype(a.dtype)                     # U_s, in-register
-    full = jnp.dot(a, u, preferred_element_type=acc).astype(acc)
+    full = pdot(a, u, acc=acc, precision=precision,
+                exact="right").astype(acc)
     ex = full - a.astype(acc)                          # exclusive row scans
     base = jnp.take_along_axis(ex, startc, axis=1)     # value before seg start
     return full - base
 
 
-def _seg_row_carries(ts: jax.Array, hrow: jax.Array, acc) -> jax.Array:
+def _seg_row_carries(ts: jax.Array, hrow: jax.Array, acc,
+                     precision: str = "highest") -> jax.Array:
     """Exclusive segmented carry over rows: ``c[r] = sum ts[lastb[r] .. r-1]``.
 
     ``ts``: (m,) per-row trailing-segment sums; ``hrow``: (m,) bool
@@ -136,11 +149,12 @@ def _seg_row_carries(ts: jax.Array, hrow: jax.Array, acc) -> jax.Array:
     qi = jax.lax.broadcasted_iota(jnp.int32, (m, m), 0)
     rj = jax.lax.broadcasted_iota(jnp.int32, (m, m), 1)
     m2 = ((qi < rj) & (qi >= lastb_ex[None, :])).astype(acc)
-    return jax.lax.dot_general(ts[None, :], m2, (((1,), (0,)), ((), ())),
-                               preferred_element_type=acc)[0]
+    return pdot(ts[None, :], m2, acc=acc, precision=precision,
+                exact="right")[0]
 
 
-def _seg_block_scan(a: jax.Array, f32: jax.Array, acc, *, masked: bool):
+def _seg_block_scan(a: jax.Array, f32: jax.Array, acc, *, masked: bool,
+                    precision: str = "highest"):
     """Segmented scan of one (m, s) row-major block held in VMEM.
 
     Returns ``(out, seen)`` where ``out`` is the block-local segmented scan
@@ -150,10 +164,10 @@ def _seg_block_scan(a: jax.Array, f32: jax.Array, acc, *, masked: bool):
     """
     startc = _row_starts(f32)
     rows = _seg_rows_masked if masked else _seg_rows_gather
-    local = rows(a, startc, acc)
+    local = rows(a, startc, acc, precision)
     ts = local[:, -1]                                  # trailing-segment sums
     hrow = jnp.max(f32, axis=1) > 0
-    c = _seg_row_carries(ts, hrow, acc)
+    c = _seg_row_carries(ts, hrow, acc, precision)
     seen_row = jax.lax.cummax(f32, axis=1) > 0         # boundary <= j in row
     out = local + jnp.where(seen_row, jnp.zeros((), acc), c[:, None])
     prev = jnp.concatenate(
@@ -168,7 +182,7 @@ def _seg_block_scan(a: jax.Array, f32: jax.Array, acc, *, masked: bool):
 # ---------------------------------------------------------------------------
 
 
-def _seg_kernel(x_ref, f_ref, o_ref, carry_ref, *, acc):
+def _seg_kernel(x_ref, f_ref, o_ref, carry_ref, *, acc, precision):
     t = pl.program_id(1)
 
     @pl.when(t == 0)
@@ -177,15 +191,15 @@ def _seg_kernel(x_ref, f_ref, o_ref, carry_ref, *, acc):
 
     a = x_ref[0, 0]                                    # (s, s) tile in VMEM
     f32 = f_ref[0, 0].astype(jnp.int32)
-    out, seen = _seg_block_scan(a, f32, acc, masked=True)
+    out, seen = _seg_block_scan(a, f32, acc, masked=True, precision=precision)
     out = out + jnp.where(seen, jnp.zeros((), acc), carry_ref[0, 0])
     carry_ref[0, 0] = out[-1, -1]                      # trailing-segment sum
     o_ref[0, 0] = out
 
 
 def seg_scan_tiles(x: jax.Array, flags: jax.Array, *, s: int = 128,
-                   accum_dtype=None,
-                   interpret: bool | None = None) -> jax.Array:
+                   accum_dtype=None, interpret: bool | None = None,
+                   precision: str = "highest") -> jax.Array:
     """Segmented scan of the last axis with one sequential-grid launch.
 
     ``x``: ``(..., n)`` packed values; ``flags``: same shape, nonzero where an
@@ -213,7 +227,7 @@ def seg_scan_tiles(x: jax.Array, flags: jax.Array, *, s: int = 128,
     ftiles = fb.reshape(b, nt, s, s)
     spec = pl.BlockSpec((1, 1, s, s), lambda i, j: (i, j, 0, 0))
     out = pl.pallas_call(
-        functools.partial(_seg_kernel, acc=acc),
+        functools.partial(_seg_kernel, acc=acc, precision=precision),
         grid=(b, nt),
         in_specs=[spec, spec],
         out_specs=spec,
@@ -272,14 +286,15 @@ def seg_block_summaries(blocks: jax.Array, fblocks: jax.Array, *,
     )(blocks, fblocks)
 
 
-def _seg_carry_kernel(ts_ref, h_ref, o_ref):
+def _seg_carry_kernel(ts_ref, h_ref, o_ref, *, precision):
     ts = ts_ref[0, :]
     hrow = h_ref[0, :] > 0
-    o_ref[0, :] = _seg_row_carries(ts, hrow, ts.dtype)
+    o_ref[0, :] = _seg_row_carries(ts, hrow, ts.dtype, precision)
 
 
 def seg_carry_scan(sums: jax.Array, has_boundary: jax.Array, *,
-                   interpret: bool | None = None) -> jax.Array:
+                   interpret: bool | None = None,
+                   precision: str = "highest") -> jax.Array:
     """Phase 2: exclusive *segmented* scan of the block summaries.
 
     This is the tentpole change to the §4 pipeline: the plain exclusive cumsum
@@ -292,7 +307,7 @@ def seg_carry_scan(sums: jax.Array, has_boundary: jax.Array, *,
         interpret = _default_interpret()
     b, nb = sums.shape
     return pl.pallas_call(
-        _seg_carry_kernel,
+        functools.partial(_seg_carry_kernel, precision=precision),
         grid=(b,),
         in_specs=[pl.BlockSpec((1, nb), lambda i: (i, 0)),
                   pl.BlockSpec((1, nb), lambda i: (i, 0))],
@@ -303,16 +318,17 @@ def seg_carry_scan(sums: jax.Array, has_boundary: jax.Array, *,
     )(sums, has_boundary)
 
 
-def _seg_block_carry_kernel(x_ref, f_ref, c_ref, o_ref, *, acc):
+def _seg_block_carry_kernel(x_ref, f_ref, c_ref, o_ref, *, acc, precision):
     a = x_ref[0, 0]
     f32 = f_ref[0, 0].astype(jnp.int32)
-    out, seen = _seg_block_scan(a, f32, acc, masked=False)
+    out, seen = _seg_block_scan(a, f32, acc, masked=False, precision=precision)
     o_ref[0, 0] = out + jnp.where(seen, jnp.zeros((), acc), c_ref[0, 0])
 
 
 def seg_block_scan_carry(blocks: jax.Array, fblocks: jax.Array,
                          carries: jax.Array, *, accum_dtype=None,
-                         interpret: bool | None = None) -> jax.Array:
+                         interpret: bool | None = None,
+                         precision: str = "highest") -> jax.Array:
     """Fused phases 1+3: block-local segmented scan + gated carry add.
 
     Each grid step reads its block once, runs the segmented block algebra in
@@ -327,7 +343,8 @@ def seg_block_scan_carry(blocks: jax.Array, fblocks: jax.Array,
         else accum_dtype_for(blocks.dtype)
     spec = pl.BlockSpec((1, 1, m, s), lambda i, j: (i, j, 0, 0))
     return pl.pallas_call(
-        functools.partial(_seg_block_carry_kernel, acc=acc),
+        functools.partial(_seg_block_carry_kernel, acc=acc,
+                          precision=precision),
         grid=(b, nb),
         in_specs=[spec, spec, pl.BlockSpec((1, 1), lambda i, j: (i, j))],
         out_specs=spec,
@@ -339,7 +356,8 @@ def seg_block_scan_carry(blocks: jax.Array, fblocks: jax.Array,
 
 def seg_blocked_scan(x: jax.Array, flags: jax.Array, *, s: int = 128,
                      block_tiles: int = 8, accum_dtype=None,
-                     interpret: bool | None = None) -> jax.Array:
+                     interpret: bool | None = None,
+                     precision: str = "highest") -> jax.Array:
     """Segmented scan of the last axis with the three-phase blocked pipeline.
 
     Same decomposition as ``scan_pipeline.blocked_scan``: phase 1 computes
@@ -373,8 +391,9 @@ def seg_blocked_scan(x: jax.Array, flags: jax.Array, *, s: int = 128,
     else:
         sums, h = seg_block_summaries(blocks, fblocks, accum_dtype=acc,
                                       interpret=interpret)
-        carries = seg_carry_scan(sums, h, interpret=interpret)
+        carries = seg_carry_scan(sums, h, interpret=interpret,
+                                 precision=precision)
     out = seg_block_scan_carry(blocks, fblocks, carries, accum_dtype=acc,
-                               interpret=interpret)
+                               interpret=interpret, precision=precision)
     out = out.reshape(b, nb * block_len)[:, :n]
     return out.reshape(*lead, n) if lead else out[0]

@@ -242,6 +242,48 @@ def test_env_override_changes_resolution_under_jit(monkeypatch):
 
 
 # ---------------------------------------------------------------------------
+# precision x method resolution (docs/architecture.md dispatch rule 9)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("precision", ["compensated", "fast"])
+def test_auto_resolution_independent_of_precision(precision):
+    # precision never steers method="auto": the table lookup is the same, and
+    # auto traces identically to passing the resolved method explicitly at
+    # that same precision
+    use_table(TEST_TABLE)
+    x = jnp.ones(8192, jnp.float32)
+    resolved = resolve_method("scan", x.shape[0], x.dtype, backend="cpu")
+    assert resolved == "matmul"  # the table entry, unmoved by precision
+    assert _jaxpr(lambda a: scan(a, method="auto", precision=precision), x) \
+        == _jaxpr(lambda a: scan(a, method=resolved, precision=precision), x)
+
+
+def test_auto_resolution_to_vector_degrades_precision_silently():
+    # auto may land on vector (small n); a non-default precision then degrades
+    # to "highest" rather than erroring — only *explicit* method="vector"
+    # rejects precision (next test)
+    use_table(TEST_TABLE)
+    x = jnp.ones(64, jnp.float32)
+    assert resolve_method("scan", 64, x.dtype, backend="cpu") == "vector"
+    assert _jaxpr(lambda a: scan(a, method="auto", precision="compensated"), x) \
+        == _jaxpr(lambda a: scan(a, method="vector"), x)
+
+
+@pytest.mark.parametrize("precision", ["compensated", "fast"])
+def test_explicit_vector_rejects_precision(precision):
+    x = jnp.ones(64, jnp.float32)
+    with pytest.raises(ValueError, match="matmul-engine"):
+        scan(x, method="vector", precision=precision)
+    a = jnp.full((2, 64), 0.5, jnp.float32)
+    with pytest.raises(ValueError, match="matmul-engine"):
+        linear_scan(a, a, method="vector", precision=precision)
+    off = jnp.asarray([0, 10, 64], jnp.int32)
+    with pytest.raises(ValueError, match="matmul-engine"):
+        segment_scan(x, off, method="vector", precision=precision)
+
+
+# ---------------------------------------------------------------------------
 # table build/validate (the pieces the CI drift gate runs)
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,86 @@
+"""Test-facing ulp oracle: run one scan-family op, score it against fp64.
+
+Thin glue between the numeric core (:mod:`repro.analysis.ulp` — references,
+conditioning scales, the ``ULP_COEFF`` bound table) and the ops under test.
+Each ``*_case`` helper runs the op at a given ``(method, precision)``, scores
+every element in fp32 ulps at the conditioning scale, and returns a
+:class:`UlpReport`; :func:`assert_within_bound` is the single assertion the
+precision tests and the benchmark sweep share, so the documented contract and
+the gated number can never drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import ulp
+from repro.core.linrec import linear_scan
+from repro.core.scan import scan
+from repro.core.segmented import segment_scan
+
+
+@dataclasses.dataclass(frozen=True)
+class UlpReport:
+    """Scored run of one op: max/mean ulp error plus the applicable bound."""
+
+    op: str
+    method: str
+    precision: str
+    n: int
+    max_ulp: float
+    mean_ulp: float
+
+    @property
+    def bound(self) -> float:
+        return ulp.ulp_bound(self.precision, self.n)
+
+    def __str__(self) -> str:
+        return (f"{self.op}/{self.method}/{self.precision}/n={self.n}: "
+                f"max {self.max_ulp:.2f} mean {self.mean_ulp:.2f} "
+                f"(bound {self.bound:.1f}) ulp")
+
+
+def _report(op, method, precision, got, ref, scale) -> UlpReport:
+    err = ulp.ulp_error(np.asarray(got), ref, scale)
+    return UlpReport(op=op, method=method, precision=precision,
+                     n=int(ref.shape[-1]),
+                     max_ulp=float(np.max(err)) if err.size else 0.0,
+                     mean_ulp=float(np.mean(err)) if err.size else 0.0)
+
+
+def scan_case(x, *, method: str, precision: str, tile_s: int = 128,
+              block_tiles: int = 8) -> UlpReport:
+    """Score ``scan`` on fp32 ``x`` against the fp64 cumsum reference."""
+    got = scan(jnp.asarray(x, jnp.float32), method=method,
+               precision=precision, tile_s=tile_s, block_tiles=block_tiles)
+    return _report("scan", method, precision, got,
+                   ulp.scan_ref(x), ulp.scan_scale(x))
+
+
+def linrec_case(a, b, *, method: str, precision: str, tile_s: int = 128,
+                block_tiles: int = 8) -> UlpReport:
+    """Score ``linear_scan`` against the fp64 sequential recurrence."""
+    got = linear_scan(jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32),
+                      method=method, precision=precision, tile_s=tile_s,
+                      block_tiles=block_tiles)
+    return _report("linear_scan", method, precision, got,
+                   ulp.linrec_ref(a, b), ulp.linrec_scale(a, b))
+
+
+def segment_scan_case(x, offsets, *, method: str, precision: str,
+                      tile_s: int = 128, block_tiles: int = 8) -> UlpReport:
+    """Score ``segment_scan`` against the per-segment fp64 reference."""
+    got = segment_scan(jnp.asarray(x, jnp.float32),
+                       jnp.asarray(offsets, jnp.int32), method=method,
+                       precision=precision, tile_s=tile_s,
+                       block_tiles=block_tiles)
+    return _report("segment_scan", method, precision, got,
+                   ulp.segment_scan_ref(x, offsets),
+                   ulp.segment_scan_scale(x, offsets))
+
+
+def assert_within_bound(report: UlpReport) -> None:
+    """The one shared assertion: measured max ulp <= the documented bound."""
+    assert report.max_ulp <= report.bound, str(report)

@@ -10,7 +10,16 @@ gate regressions instead of only being uploaded as an artifact:
 * **exact derived metrics** — integer model quantities embedded in the
   ``derived`` column (``passes``, ``expected``, ``bits``, ``bytes_moved``,
   ``n``, ``scans_per_batch``) must match exactly: they encode algorithmic
-  facts (launch counts, traffic models), not timings.
+  facts (launch counts, traffic models), not timings.  A gated key that is
+  present in the baseline row but *missing* from the fresh row is a hard
+  failure too — otherwise a benchmark edit that drops a derived column (say
+  ``max_ulp``) silently un-gates it.
+* **bounded derived metrics** — accuracy floats (``max_ulp``) are gated with
+  slack instead of exactly: the fresh value must stay within
+  ``ULP_FACTOR``x the baseline plus ``ULP_SLACK`` ulps (contraction order,
+  and hence the ulp count, legitimately varies across BLAS builds), and when
+  the row also carries its documented ``ulp_bound`` the fresh value must not
+  exceed it — that is the precision contract itself, machine-independent.
 * **timings** — ``us_per_call`` is compared *after normalizing out machine
   speed*: the median of ``fresh/baseline`` ratios across **all** files is
   taken as the machine-speed scale, and each row's normalized ratio must stay
@@ -47,6 +56,11 @@ import sys
 
 EXACT_KEYS = ("passes", "expected", "bits", "bytes_moved", "n",
               "scans_per_batch")
+# accuracy floats: gated within a factor + slack of baseline, and against the
+# row's own documented ulp_bound when present (see module docstring)
+BOUNDED_KEYS = ("max_ulp",)
+ULP_FACTOR = 4.0
+ULP_SLACK = 4.0
 
 
 def _load(path: str) -> dict:
@@ -79,20 +93,55 @@ def compare_file(name: str, fresh: dict, base: dict) -> "tuple[list, dict]":
     if new:
         print(f"  note: {name} has {len(new)} new row(s) (allowed)")
     shared = sorted(set(base) & set(fresh))
-    # exact derived metrics
+    # derived metrics: a gated key present in the baseline row but absent
+    # from the fresh row is a hard failure (dropping the column must not
+    # silently un-gate it), then exact keys compare exactly and bounded keys
+    # within factor + slack (plus the row's own documented ulp_bound).
     for r in shared:
         bd = _derived_map(base[r].get("derived", ""))
         fd = _derived_map(fresh[r].get("derived", ""))
+        for k in EXACT_KEYS + BOUNDED_KEYS:
+            if k in bd and k not in fd:
+                fails.append(
+                    f"{name}: {r}: derived key {k!r} present in baseline but "
+                    "missing from the fresh row (un-gating is not allowed)")
         for k in EXACT_KEYS:
             if k in bd and k in fd and bd[k] != fd[k]:
                 fails.append(
                     f"{name}: {r}: derived {k}={fd[k]} != baseline {bd[k]}")
+        for k in BOUNDED_KEYS:
+            if k in bd and k in fd:
+                bv, fv = float(bd[k]), float(fd[k])
+                allowed = ULP_FACTOR * bv + ULP_SLACK
+                if fv > allowed:
+                    fails.append(
+                        f"{name}: {r}: derived {k}={fv:.2f} exceeds "
+                        f"baseline {bv:.2f} beyond the allowance "
+                        f"({ULP_FACTOR}x + {ULP_SLACK} = {allowed:.2f})")
     ratios = {}
     for r in shared:
         bt, ft = base[r]["us_per_call"], fresh[r]["us_per_call"]
         if bt > 0 and ft > 0:
             ratios[f"{name}: {r}"] = ft / bt
     return fails, ratios
+
+
+def check_ulp_contract(name: str, fresh: dict) -> list:
+    """Self-contained precision gate: ``max_ulp <= ulp_bound`` per fresh row.
+
+    Runs on *every* fresh row carrying both keys — baseline or not — because
+    the bound is the documented contract of ``repro.analysis.ulp``, not a
+    machine-relative quantity.
+    """
+    fails = []
+    for rname, r in sorted(fresh.items()):
+        fd = _derived_map(r.get("derived", ""))
+        if "max_ulp" in fd and "ulp_bound" in fd:
+            if float(fd["max_ulp"]) > float(fd["ulp_bound"]):
+                fails.append(
+                    f"{name}: {rname}: max_ulp={fd['max_ulp']} exceeds the "
+                    f"documented precision bound ulp_bound={fd['ulp_bound']}")
+    return fails
 
 
 def check_auto_vs_oracle(name: str, fresh: dict, factor: float) -> list:
@@ -164,6 +213,7 @@ def main() -> int:
         fails.extend(file_fails)
         fails.extend(check_auto_vs_oracle(fname, fresh_rows,
                                           args.auto_factor))
+        fails.extend(check_ulp_contract(fname, fresh_rows))
         all_ratios.update(ratios)
     # timings, normalized by the suite-wide median ratio (machine speed) so a
     # section-wide slowdown cannot hide inside its own file's normalization
@@ -184,8 +234,9 @@ def main() -> int:
         set(os.path.basename(p) for p in base_files))
     for f in fresh_only:
         print(f"  note: {f} has no baseline yet (allowed; commit one to gate it)")
-        fails.extend(check_auto_vs_oracle(
-            f, _load(os.path.join(args.fresh_dir, f)), args.auto_factor))
+        rows = _load(os.path.join(args.fresh_dir, f))
+        fails.extend(check_auto_vs_oracle(f, rows, args.auto_factor))
+        fails.extend(check_ulp_contract(f, rows))
     if fails:
         print(f"\nFAIL: {len(fails)} benchmark drift(s):", file=sys.stderr)
         for f in fails:
