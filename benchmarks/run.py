@@ -604,6 +604,52 @@ def ops_operators(smoke: bool):
     ops_top_p(1024 if smoke else 16384, batch=2 if smoke else 4)
 
 
+def guards_identity_guard():
+    """Assert guards-off traces are byte-identical to ``guards_disabled``.
+
+    Rule 10's zero-overhead contract: with ``REPRO_CHECKS`` unset, every
+    guarded operator must stage the exact jaxpr it staged before the guards
+    layer existed.  Trace-only (no execution); a mismatch aborts the run with
+    a non-zero exit — the bench-smoke CI gate against guard ops leaking into
+    the default trace.
+    """
+    import re
+
+    from repro.core import guards
+    from repro.core.linrec import linear_scan
+    from repro.core.primitives import weighted_sample
+    from repro.core.segmented import segment_scan, segment_top_p_sample
+
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(5), jnp.float32)
+    off = jnp.asarray([0, 3, 5], jnp.int32)
+    cases = {
+        "scan": lambda v: scan(v),
+        "linrec": lambda v: linear_scan(v, v),
+        "segment_scan": lambda v: segment_scan(v, off),
+        "weighted_sample": lambda v: weighted_sample(
+            v, None, u=jnp.asarray(0.5)),
+        "top_p": lambda v: top_p_sample(v[None], None, p=0.9,
+                                        u=jnp.asarray([[0.5]])),
+        "segment_top_p": lambda v: segment_top_p_sample(
+            v, off, p=0.9, u=jnp.asarray([[0.5], [0.5]])),
+    }
+
+    def trace(fn):
+        return re.sub(r"0x[0-9a-f]+", "", str(jax.make_jaxpr(fn)(x)))
+
+    for name, fn in cases.items():
+        with guards.checks(False):
+            guarded = trace(fn)
+        with guards.guards_disabled():
+            bare = trace(fn)
+        same = guarded == bare
+        row(f"guards/jaxpr_identity/{name}", 0.0, f"identical={same}")
+        if not same:
+            raise SystemExit(
+                f"guards jaxpr-identity guard: {name} traces differently "
+                "with the guards layer active (checks off) vs disabled")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="larger sizes")
@@ -629,12 +675,14 @@ def main() -> None:
         "linrec": lambda: linrec_sweep(smoke=args.smoke),
         "precision": lambda: precision_sweep(smoke=args.smoke),
         "ops": lambda: ops_operators(smoke=args.smoke),
+        "guards": guards_identity_guard,
     }
     only = set(args.only.split(",")) if args.only else None
     if args.smoke and only is None:
-        # fast, single-process sections (sort carries the pass-count guard)
+        # fast, single-process sections (sort carries the pass-count guard,
+        # guards carries the jaxpr-identity guard)
         only = {"fig3", "fig10", "fig11", "scan_pipeline", "sort", "segscan",
-                "linrec", "precision", "ops"}
+                "linrec", "precision", "ops", "guards"}
     print("name,us_per_call,derived")
     for name, fn in sections.items():
         if only and name not in only:

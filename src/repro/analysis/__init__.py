@@ -1,1 +1,4 @@
-"""Analysis — roofline/report/collectives tooling over BENCH output."""
+"""Analysis — roofline/report/collectives tooling and the fault harness."""
+from repro.analysis.faults import (
+    OUTCOMES, adversarial_params, classify, corrupt_offsets, inject_nonfinite,
+)

@@ -1,0 +1,174 @@
+"""Fault-injection harness for the guardrails layer (dispatch rule 10).
+
+``tests/test_faults.py`` drives every injector below through the public
+operators and asserts each fault lands on one of the **documented
+contracts** — never on silence or a crash deep inside a kernel:
+
+* ``"value"`` / ``"type"`` — rejected eagerly at the call site
+  (``ValueError`` / ``TypeError`` from the pre-trace validators).
+* ``"nonfinite"`` — rejected by ``nonfinite="raise"``
+  (:class:`repro.core.guards.NonFiniteError`).
+* ``"checkified"`` — caught by a staged in-jit assertion
+  (``checkify.JaxRuntimeError`` under :func:`repro.core.guards.checked` with
+  checks enabled).
+* ``"degraded"`` — dispatch fell back with a warn-once
+  :class:`repro.core.guards.ProbeFallbackWarning` (lowering faults).
+* ``"ok"`` — the call completed: the documented behaviour for
+  ``nonfinite="propagate"`` (IEEE semantics) and ``"sanitize"``
+  (identity-element / greedy fallback).
+
+The injectors are deterministic (seeded) so failures replay exactly.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.guards import (  # noqa: F401  (re-exported harness hooks)
+    NonFiniteError, ProbeFallbackWarning, checked, checks,
+    force_probe_failure,
+)
+
+__all__ = [
+    "OUTCOMES", "inject_nonfinite", "corrupt_offsets", "adversarial_params",
+    "classify", "NonFiniteError", "ProbeFallbackWarning", "checked", "checks",
+    "force_probe_failure",
+]
+
+OUTCOMES = ("ok", "value", "type", "nonfinite", "checkified", "degraded")
+
+
+def inject_nonfinite(x: jax.Array, kind: str = "nan", frac: float = 0.1,
+                     seed: int = 0) -> jax.Array:
+    """Poison a deterministic fraction of ``x`` with a non-finite payload.
+
+    Args:
+        x: Float array to corrupt.
+        kind: ``"nan"``, ``"inf"``, ``"-inf"``, or ``"extreme"`` (alternating
+            ``±max_float`` — finite, but overflows any accumulation).
+        frac: Fraction of elements to poison (at least one).
+        seed: PRNG seed for the poisoned positions.
+
+    Returns:
+        A copy of ``x`` with the payload written at the chosen positions.
+
+    Example:
+        >>> x = inject_nonfinite(jnp.ones(8), "nan", frac=0.25)
+        >>> int(jnp.isnan(x).sum())
+        2
+    """
+    payloads = {
+        "nan": np.nan, "inf": np.inf, "-inf": -np.inf,
+        "extreme": None,
+    }
+    if kind not in payloads:
+        raise ValueError(f"unknown kind {kind!r}; expected one of "
+                         f"{tuple(payloads)}")
+    arr = np.array(jnp.asarray(x), copy=True)
+    flat = arr.reshape(-1)
+    k = max(1, int(frac * flat.size))
+    idx = np.random.default_rng(seed).choice(flat.size, size=k, replace=False)
+    if kind == "extreme":
+        big = np.finfo(flat.dtype).max
+        flat[idx] = np.where(np.arange(k) % 2 == 0, big, -big)
+    else:
+        flat[idx] = payloads[kind]
+    return jnp.asarray(arr)
+
+
+def corrupt_offsets(offsets: jax.Array, mode: str = "unsorted") -> jax.Array:
+    """Break a CSR offsets array in one specific, documented way.
+
+    Args:
+        offsets: Valid ``(num_segments + 1,)`` int offsets.
+        mode: ``"unsorted"`` (swap two interior offsets), ``"negative"``
+            (first entry below zero), ``"overrun"`` (last entry past ``n``),
+            ``"head"`` (first entry nonzero), or ``"float"`` (float dtype —
+            a ``TypeError``-class static fault).
+
+    Returns:
+        The corrupted offsets.
+
+    Example:
+        >>> o = corrupt_offsets(jnp.asarray([0, 3, 5]), "overrun")
+        >>> o.tolist()
+        [0, 3, 6]
+    """
+    off = np.array(jnp.asarray(offsets), copy=True)
+    if mode == "unsorted":
+        if off.shape[0] < 3:
+            raise ValueError("unsorted needs at least two segments")
+        mid = off.shape[0] // 2
+        off[mid], off[mid - 1] = off[mid - 1], off[mid] + 1
+    elif mode == "negative":
+        off[0] = -1
+    elif mode == "overrun":
+        off[-1] = off[-1] + 1
+    elif mode == "head":
+        off[0] = 1
+    elif mode == "float":
+        return jnp.asarray(off, jnp.float32)
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    return jnp.asarray(off)
+
+
+def adversarial_params(which: str) -> dict:
+    """Named adversarial sampler parameter sets for the fault suite.
+
+    Example:
+        >>> adversarial_params("p_over")["p"]
+        1.5
+    """
+    table = {
+        "p_over": {"p": 1.5},
+        "p_under": {"p": -0.1},
+        "p_nan": {"p": float("nan")},
+        "temp_negative": {"temperature": -1.0},
+        "temp_nan": {"temperature": float("nan")},
+        "temp_inf": {"temperature": float("inf")},
+        "temp_zero": {"temperature": 0.0},   # legal: greedy limit
+    }
+    if which not in table:
+        raise ValueError(f"unknown param set {which!r}; expected one of "
+                         f"{tuple(table)}")
+    return dict(table[which])
+
+
+def classify(fn, *args, **kwargs) -> Tuple[str, Optional[object]]:
+    """Run ``fn(*args, **kwargs)`` and classify its outcome.
+
+    Returns ``(outcome, detail)`` where ``outcome`` is one of ``OUTCOMES``
+    and ``detail`` is the result (``"ok"``), the exception, or the warning.
+    A :class:`ProbeFallbackWarning` emitted during an otherwise-successful
+    call classifies as ``"degraded"``; any other exception type propagates —
+    an *undocumented* failure is exactly what the fault suite must flag.
+
+    Example:
+        >>> from repro.core.scan import scan
+        >>> classify(scan, jnp.ones(4), axis=7)[0]
+        'value'
+    """
+    from jax.experimental import checkify
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        try:
+            out = fn(*args, **kwargs)
+            jax.block_until_ready(out)
+        except NonFiniteError as e:
+            return "nonfinite", e
+        except checkify.JaxRuntimeError as e:
+            return "checkified", e
+        except TypeError as e:
+            return "type", e
+        except ValueError as e:
+            return "value", e
+    for w in caught:
+        if issubclass(w.category, ProbeFallbackWarning):
+            return "degraded", w
+    return "ok", out

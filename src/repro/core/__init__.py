@@ -2,6 +2,11 @@
 from repro.core.autotune import (
     resolve_method, maybe_resolve, method_override, AutotuneFallbackWarning,
 )
+from repro.core.guards import (
+    NONFINITE, NonFiniteError, ProbeFallbackWarning, checked, checks,
+    checks_enabled, force_probe_failure, guards_disabled, nonfinite_override,
+    probe_lowering, resolve_nonfinite,
+)
 from repro.core.precision import (
     PRECISIONS, precision_override, resolve_precision,
 )

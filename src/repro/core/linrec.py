@@ -54,6 +54,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import guards
 from repro.core.autotune import maybe_resolve
 from repro.core.precision import normalize_exponents, pdot, resolve_precision
 from repro.core.primitives import _register, dispatch
@@ -359,6 +360,7 @@ def linear_scan(
     tile_s: int = 128,
     block_tiles: int = 8,
     accum_dtype: Optional[jnp.dtype] = None,
+    nonfinite: str = "propagate",
 ) -> jax.Array:
     """First-order linear recurrence ``y_t = a_t * y_{t-1} + b_t`` along ``axis``.
 
@@ -400,15 +402,23 @@ def linear_scan(
         block_tiles: Tiles per block for ``method="blocked"``.
         accum_dtype: Accumulation dtype override; defaults to
             :func:`linrec_accum_dtype_for` of the broadcast input dtype.
+        nonfinite: Non-finite input policy (:mod:`repro.core.guards`,
+            dispatch rule 10; ``nonfinite_override`` context >
+            ``REPRO_NONFINITE`` env > this argument).  ``"propagate"``
+            (default) keeps IEEE semantics with zero added ops; ``"raise"``
+            rejects non-finite operands (eagerly when concrete, checkified
+            under trace); ``"sanitize"`` replaces non-finite elements with
+            the affine identity — ``a -> 1``, ``b -> 0`` — so corrupted steps
+            pass the running state through unchanged.
 
     Returns:
         The scanned array (broadcast shape of ``a`` and ``b``) in the
         accumulation dtype.
 
     Raises:
-        ValueError: If ``method`` or ``precision`` is unknown, or an explicit
-            non-default ``precision`` is combined with an explicit
-            ``method="vector"``.
+        ValueError: If ``method``, ``precision`` or ``nonfinite`` is unknown,
+            ``axis`` is out of bounds, or an explicit non-default
+            ``precision`` is combined with an explicit ``method="vector"``.
 
     Example:
         >>> import jax.numpy as jnp
@@ -439,7 +449,7 @@ def linear_scan(
     acc = jnp.dtype(accum_dtype) if accum_dtype is not None \
         else linrec_accum_dtype_for(jnp.result_type(a.dtype, b.dtype))
 
-    orig_axis = axis % nd
+    orig_axis = guards.validate_axis(axis, nd, op="linear_scan")
     moved = orig_axis != nd - 1
     if moved:
         a = jnp.moveaxis(a, orig_axis, -1)
@@ -454,6 +464,9 @@ def linear_scan(
                            jnp.result_type(a.dtype, b.dtype))
     precision = resolve_precision(precision, method=method,
                                   explicit_method=explicit_method)
+    nonfinite = guards.resolve_nonfinite(nonfinite)
+    a = guards.apply_nonfinite(a, nonfinite, op="linear_scan", identity=1.0)
+    b = guards.apply_nonfinite(b, nonfinite, op="linear_scan", identity=0.0)
     full = jnp.broadcast_shapes(a.shape, b.shape)
     # b is output-sized anyway — materialize it (keeps the custom-VJP
     # cotangent shapes trivial); a stays unbroadcast for the shared-W saving.

@@ -39,6 +39,7 @@ from typing import Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import guards
 from repro.core.autotune import maybe_resolve
 from repro.core.scan import METHODS, scan
 
@@ -220,6 +221,7 @@ def split(x: jax.Array, flags: jax.Array, *, method: str = "auto",
         >>> z.tolist(), ind.tolist(), int(k)
         ([20, 40, 10, 30], [1, 3, 0, 2], 2)
     """
+    guards.validate_same_shape(x.shape, jnp.shape(flags), op="split")
     method = maybe_resolve(method, "split", x.shape[-1], x.dtype)
     z, ind, n_true = dispatch("split", method)(
         x, flags, method=method, tile_s=tile_s, interpret=interpret)
@@ -353,6 +355,8 @@ def multi_split(x: jax.Array, digits: jax.Array, num_buckets: int, *,
     """
     if num_buckets < 1:
         raise ValueError(f"num_buckets must be >= 1, got {num_buckets}")
+    guards.validate_same_shape(x.shape, jnp.shape(digits), op="multi_split",
+                               b_name="digits")
     method = maybe_resolve(method, "multi_split", x.shape[-1], x.dtype)
     z, ind, counts = dispatch("multi_split", method)(
         x, digits, num_buckets, method=method, tile_s=tile_s,
@@ -544,9 +548,8 @@ def radix_sort(x: jax.Array, *, descending: bool = False, method: str = "auto",
         >>> i8.tolist() == i1.tolist() == [0, 2, 3, 1]   # stable: first 7 first
         True
     """
-    if not 1 <= bits_per_pass <= 8:
-        raise ValueError(
-            f"bits_per_pass must be in [1, 8], got {bits_per_pass}")
+    bits_per_pass = guards.validate_bits_per_pass(bits_per_pass,
+                                                  op="radix_sort")
     method = maybe_resolve(method, "radix_sort", x.shape[-1], x.dtype)
     enc, bits, decode = _encode_for_sort(x)
     if descending:
@@ -622,7 +625,8 @@ def topk(x: jax.Array, k: int, *, method: str = "auto", tile_s: int = 128,
 
 def weighted_sample(w: jax.Array, key: jax.Array, *, method: str = "auto",
                     cdf: Optional[jax.Array] = None, tile_s: int = 128,
-                    u: Optional[jax.Array] = None) -> jax.Array:
+                    u: Optional[jax.Array] = None,
+                    nonfinite: str = "propagate") -> jax.Array:
     """Inverse-transform sampling on the scanned CDF (paper §5).
 
     The paper invokes SplitInd with predicate ``scan(w) > θ·Σw`` and reads the
@@ -638,6 +642,15 @@ def weighted_sample(w: jax.Array, key: jax.Array, *, method: str = "auto",
         u: Optional pre-drawn uniforms of shape ``w.shape[:-1] + (1,)``
             overriding the ``key`` draw — deterministic replay and the
             segmented sampler's per-segment parity tests use this.
+        nonfinite: Non-finite weight policy (:mod:`repro.core.guards`,
+            dispatch rule 10; context > ``REPRO_NONFINITE`` env > argument).
+            ``"propagate"`` (default) keeps IEEE semantics; ``"raise"``
+            rejects non-finite weights; ``"sanitize"`` zeroes non-finite
+            weights and maps degenerate rows (total mass not finite and
+            positive) to the deterministic greedy index (argmax of the
+            sanitized weights, ties to the first).  Under ``REPRO_CHECKS=1``
+            a checkified assertion additionally verifies the CDF is finite
+            before the inverse-transform step.
 
     Returns:
         Sampled indices, shape ``w.shape[:-1]``, int32, in ``[0, n)``.
@@ -649,16 +662,64 @@ def weighted_sample(w: jax.Array, key: jax.Array, *, method: str = "auto",
         >>> int(weighted_sample(jnp.asarray([1.0, 1.0]), None,
         ...                     u=jnp.asarray([0.75])))
         1
+        >>> int(weighted_sample(jnp.asarray([0.2, jnp.nan, 0.1]), None,
+        ...                     u=jnp.asarray([0.99]), nonfinite="sanitize"))
+        2
     """
     method = maybe_resolve(method, "weighted_sample", w.shape[-1], w.dtype)
+    nonfinite = guards.resolve_nonfinite(nonfinite)
+    w_eff = w
+    if nonfinite == "raise":
+        w_eff = guards.apply_nonfinite(w, nonfinite, op="weighted_sample")
+    elif nonfinite == "sanitize":
+        w_eff = guards.apply_nonfinite(w, nonfinite, op="weighted_sample")
+        if w_eff is not w:
+            cdf = None  # a caller-supplied CDF no longer matches
     if cdf is None:
-        cdf = scan(w, axis=-1, method=method, tile_s=tile_s)
+        cdf = scan(w_eff, axis=-1, method=method, tile_s=tile_s)
+    if jnp.issubdtype(jnp.result_type(cdf), jnp.floating):
+        final_cdf = cdf
+        guards.guard_check(lambda: jnp.all(jnp.isfinite(final_cdf)),
+                           "weighted_sample: non-finite CDF before the "
+                           "inverse-transform sample")
     total = cdf[..., -1:]
     if u is None:
         u = jax.random.uniform(key, w.shape[:-1] + (1,), dtype=cdf.dtype)
     theta = u.astype(cdf.dtype) * total
     idx = jnp.sum((cdf < theta).astype(jnp.int32), axis=-1)
-    return jnp.clip(idx, 0, w.shape[-1] - 1)
+    idx = jnp.clip(idx, 0, w.shape[-1] - 1)
+    if nonfinite == "sanitize" and jnp.issubdtype(w_eff.dtype, jnp.floating):
+        bad = ~(jnp.isfinite(total[..., 0]) & (total[..., 0] > 0))
+        greedy = jnp.argmax(w_eff, axis=-1).astype(idx.dtype)
+        idx = jnp.where(bad, greedy, idx)
+    return idx
+
+
+def _reject_poisoned_logits(logits: jax.Array) -> jax.Array:
+    """``nonfinite="raise"`` for samplers: NaN/+inf and all-``-inf`` rows fail.
+
+    ``-inf`` entries are legitimate vocabulary masks, so plain
+    :func:`repro.core.guards.apply_nonfinite` is too strict here: a row is
+    poisoned when it carries NaN or ``+inf``, or masks *every* token.
+    Concrete logits raise :class:`repro.core.guards.NonFiniteError` eagerly;
+    traced logits stage a checkified assertion (fires under
+    ``guards.checked`` / ``REPRO_CHECKS=1`` harnesses).
+    """
+    msg = ("top_p_sample: poisoned logits under nonfinite='raise' (NaN/+inf "
+           "entries or a fully masked row)")
+    if guards.is_concrete(logits):
+        import numpy as np
+        arr = np.asarray(logits, dtype=np.float32)
+        ok = (~np.isnan(arr).any() and not np.isposinf(arr).any()
+              and bool(np.isfinite(arr).any(axis=-1).all()))
+        if not ok:
+            raise guards.NonFiniteError(msg)
+    else:
+        from jax.experimental import checkify
+        checkify.debug_check(
+            ~jnp.any(jnp.isnan(logits)) & ~jnp.any(jnp.isposinf(logits))
+            & jnp.all(jnp.any(jnp.isfinite(logits), axis=-1)), msg)
+    return logits
 
 
 @_register("top_p_tail", "matmul", "vector", "blocked")
@@ -685,7 +746,8 @@ def top_p_sample(logits: jax.Array, key: jax.Array, p: float = 0.9,
                  temperature: float = 1.0, *, method: str = "auto",
                  sort_method: str = "radix", tile_s: int = 128,
                  bits_per_pass: int = 4, u: Optional[jax.Array] = None,
-                 interpret: Optional[bool] = None) -> jax.Array:
+                 interpret: Optional[bool] = None,
+                 nonfinite: str = "propagate") -> jax.Array:
     """Nucleus sampling exactly as in the paper's Llama3 case study (§5, §6.5).
 
     Sort (radix, scan-based) -> prefix-sum of sorted probabilities -> mask
@@ -713,21 +775,61 @@ def top_p_sample(logits: jax.Array, key: jax.Array, p: float = 0.9,
             overriding the ``key`` draw in the sampling tail (deterministic
             replay; the segmented sampler's parity tests use this).
         interpret: Force Pallas interpret mode.
+        nonfinite: Non-finite logit policy (:mod:`repro.core.guards`,
+            dispatch rule 10; context > ``REPRO_NONFINITE`` env > argument).
+            ``"propagate"`` (default) keeps IEEE semantics — an all-``-inf``
+            or NaN-poisoned row yields an undefined sample, exactly as
+            before; ``"raise"`` rejects non-finite *upward* logits (``-inf``
+            mask entries are legitimate and always allowed); ``"sanitize"``
+            maps rows whose softmax degenerates (all masked / all ``-inf`` /
+            any NaN) to the deterministic greedy token — argmax over the
+            logits with NaNs treated as ``-inf``, ties to the lowest id.
 
     Returns:
         Sampled token ids, shape ``logits.shape[:-1]``, int32.
+
+    Raises:
+        ValueError: If ``p`` (concrete) is outside ``[0, 1]`` or
+            ``temperature`` (concrete) is negative or NaN.
+
+    Note:
+        ``temperature == 0`` is the documented greedy limit: the call returns
+        the deterministic argmax (NaN logits treated as ``-inf``) for every
+        ``method`` without tracing the sampling pipeline.
 
     Example:
         >>> import jax, jax.numpy as jnp
         >>> logits = jnp.asarray([[0.0, 20.0, 0.0, 0.0]])
         >>> int(top_p_sample(logits, jax.random.PRNGKey(1), p=0.9)[0])
         1
+        >>> int(top_p_sample(logits, jax.random.PRNGKey(1), temperature=0.0)[0])
+        1
     """
+    guards.validate_probability(p, op="top_p_sample")
+    guards.validate_temperature(temperature, op="top_p_sample")
+    nonfinite = guards.resolve_nonfinite(nonfinite)
+    if guards.is_concrete(temperature) and float(temperature) == 0.0:
+        # the temperature -> 0 limit: all mass on the max logit
+        greedy = jnp.where(jnp.isnan(logits), -jnp.inf, logits)
+        return jnp.argmax(greedy, axis=-1).astype(jnp.int32)
     method = maybe_resolve(method, "top_p_sample", logits.shape[-1],
                            logits.dtype)
+    if nonfinite == "raise":
+        # -inf entries are legitimate vocabulary masks; reject NaN and +inf
+        logits = _reject_poisoned_logits(logits)
     if temperature != 1.0:
         logits = logits / temperature
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    if nonfinite == "sanitize":
+        # degenerate rows (all masked / all--inf / NaN-poisoned) have a NaN
+        # softmax; give them a one-hot at the deterministic greedy token so
+        # the tail (and its staged finite-CDF check) sees a valid
+        # distribution and samples the greedy fallback
+        bad = ~jnp.all(jnp.isfinite(probs), axis=-1)
+        greedy = jnp.argmax(jnp.where(jnp.isnan(logits), -jnp.inf, logits),
+                            axis=-1)
+        onehot = jax.nn.one_hot(greedy, probs.shape[-1], dtype=probs.dtype)
+        probs = jnp.where(bad[..., None], onehot, probs)
     if sort_method == "radix":
         # Sort on bf16-rounded keys (16 bits, as in the paper's fp16
         # evaluation); ties/rounding only reorder within ~3-ulp probability bands.
@@ -741,4 +843,9 @@ def top_p_sample(logits: jax.Array, key: jax.Array, p: float = 0.9,
     j = dispatch("top_p_tail", method)(
         sorted_p, key, p=p, method=method, tile_s=tile_s, interpret=interpret,
         u=u)
-    return _take_along_last(order, j[..., None])[..., 0]
+    tok = _take_along_last(order, j[..., None])[..., 0]
+    if nonfinite == "sanitize":
+        # belt-and-braces: the one-hot rewrite above makes the tail itself
+        # deterministic for repaired rows, but pin the token regardless
+        tok = jnp.where(bad, greedy.astype(tok.dtype), tok)
+    return tok

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import guards
 from repro.core.autotune import maybe_resolve
 from repro.core.precision import pdot, resolve_precision
 
@@ -278,6 +279,7 @@ def scan(
     tile_s: int = 128,
     block_tiles: int = 8,
     accum_dtype: Optional[jnp.dtype] = None,
+    nonfinite: str = "propagate",
 ) -> jax.Array:
     """Inclusive (or exclusive) prefix sum along ``axis``.
 
@@ -327,14 +329,22 @@ def scan(
             otherwise); a block covers ``block_tiles * tile_s²`` elements.
         accum_dtype: Accumulation dtype override; defaults to
             ``accum_dtype_for(x.dtype)``.
+        nonfinite: Non-finite input policy (:mod:`repro.core.guards`,
+            dispatch rule 10), resolved pre-trace like ``method`` and
+            ``precision`` (``nonfinite_override`` context > ``REPRO_NONFINITE``
+            env > this argument).  ``"propagate"`` (default) keeps IEEE
+            semantics and adds zero ops; ``"raise"`` rejects non-finite
+            inputs (eagerly when concrete, as a checkified assertion under
+            trace); ``"sanitize"`` replaces non-finite elements with 0 (the
+            additive identity).  Integer scans are unaffected.
 
     Returns:
         The scanned array, same shape as ``x``, in the accumulation dtype.
 
     Raises:
-        ValueError: If ``method``, ``precision`` or ``variant`` is unknown, or
-            an explicit non-default ``precision`` is combined with an explicit
-            ``method="vector"``.
+        ValueError: If ``method``, ``precision``, ``variant`` or ``nonfinite``
+            is unknown, ``axis`` is out of bounds, or an explicit non-default
+            ``precision`` is combined with an explicit ``method="vector"``.
 
     Example:
         >>> import jax.numpy as jnp
@@ -353,11 +363,13 @@ def scan(
         raise ValueError(f"unknown scan variant {variant!r}")
     acc = jnp.dtype(accum_dtype) if accum_dtype is not None else accum_dtype_for(x.dtype)
 
-    axis = axis % x.ndim
+    axis = guards.validate_axis(axis, x.ndim, op="scan")
     explicit_method = method != "auto"
     method = maybe_resolve(method, "scan", x.shape[axis], x.dtype)
     precision = resolve_precision(precision, method=method,
                                   explicit_method=explicit_method)
+    x = guards.apply_nonfinite(x, guards.resolve_nonfinite(nonfinite),
+                               op="scan")
     if axis != x.ndim - 1:
         x = jnp.moveaxis(x, axis, -1)
     if reverse:

@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import guards
 from repro.core.autotune import maybe_resolve
 from repro.core.linrec import linear_scan, linrec_accum_dtype_for
 from repro.core.precision import resolve_precision
@@ -154,13 +155,23 @@ class SegmentedBatch:
         return dense, mask
 
 
-def _unwrap(values, offsets):
-    """Accept either a :class:`SegmentedBatch` or a ``(values, offsets)`` pair."""
+def _unwrap(values, offsets, *, op: str = "segmented"):
+    """Accept either a :class:`SegmentedBatch` or a ``(values, offsets)`` pair.
+
+    Offsets are validated on the way in (dispatch rule 10): static structure
+    (rank, dtype) always, the full CSR contract eagerly when the offsets are
+    concrete, and as a staged :func:`repro.core.guards.guard_check` assertion
+    when they are traced — every packed-batch entry point shares this one
+    choke point.
+    """
     if isinstance(values, SegmentedBatch):
-        return values.values, values.offsets
-    if offsets is None:
+        values, offsets = values.values, values.offsets
+    elif offsets is None:
         raise ValueError("offsets required when values is not a SegmentedBatch")
-    return values, jnp.asarray(offsets, jnp.int32)
+    else:
+        offsets = jnp.asarray(offsets, jnp.int32)
+    offsets = guards.validate_offsets(offsets, jnp.shape(values)[-1], op=op)
+    return values, offsets
 
 
 # ---------------------------------------------------------------------------
@@ -285,7 +296,8 @@ def _segment_scan_blocked(values, offsets, *, method, tile_s, block_tiles,
 def segment_scan(values, offsets=None, *, exclusive: bool = False,
                  reverse: bool = False, method: str = "auto",
                  tile_s: int = 128, block_tiles: int = 8,
-                 accum_dtype=None, precision: str = "highest") -> jax.Array:
+                 accum_dtype=None, precision: str = "highest",
+                 nonfinite: str = "propagate") -> jax.Array:
     """Per-segment prefix sum of a packed batch — the carry resets at boundaries.
 
     The segmented analogue of :func:`repro.core.scan.scan`: same ``method=``
@@ -309,6 +321,10 @@ def segment_scan(values, offsets=None, *, exclusive: bool = False,
             ``"highest"`` (default), ``"compensated"`` or ``"fast"``; see
             :mod:`repro.core.precision` (dispatch rule 9).  Integer mask
             scans stay exact under every precision.
+        nonfinite: Non-finite input policy — ``"propagate"`` (default, IEEE
+            semantics), ``"raise"`` or ``"sanitize"`` (non-finite elements
+            become the additive identity 0); see
+            :func:`repro.core.guards.resolve_nonfinite` (dispatch rule 10).
 
     Returns:
         The per-segment scanned array, same shape as ``values``, in the
@@ -316,7 +332,10 @@ def segment_scan(values, offsets=None, *, exclusive: bool = False,
 
     Raises:
         ValueError: If an explicit non-default ``precision`` is combined
-            with an explicit ``method="vector"``.
+            with an explicit ``method="vector"``, or the offsets break the
+            CSR contract.
+        repro.core.guards.NonFiniteError: Under ``nonfinite="raise"`` with
+            a concrete non-finite payload.
 
     Example:
         >>> import jax.numpy as jnp
@@ -326,7 +345,9 @@ def segment_scan(values, offsets=None, *, exclusive: bool = False,
         >>> segment_scan(x, jnp.asarray([0, 2, 5]), exclusive=True).tolist()
         [0, 1, 0, 1, 2]
     """
-    values, offsets = _unwrap(values, offsets)
+    values, offsets = _unwrap(values, offsets, op="segment_scan")
+    values = guards.apply_nonfinite(
+        values, guards.resolve_nonfinite(nonfinite), op="segment_scan")
     n = values.shape[-1]
     explicit_method = method != "auto"
     method = maybe_resolve(method, "segment_scan", n, values.dtype)
@@ -378,8 +399,8 @@ def segment_cumsum(values, offsets=None, **kw) -> jax.Array:
 def segment_linear_scan(a, b, offsets=None, *, exclusive: bool = False,
                         reverse: bool = False, method: str = "auto",
                         initial=0.0, tile_s: int = 128, block_tiles: int = 8,
-                        accum_dtype=None,
-                        precision: str = "highest") -> jax.Array:
+                        accum_dtype=None, precision: str = "highest",
+                        nonfinite: str = "propagate") -> jax.Array:
     """Per-segment linear recurrence ``y_t = a_t * y_{t-1} + b_t`` of a packed batch.
 
     The segmented analogue of :func:`repro.core.linrec.linear_scan`: at every
@@ -411,6 +432,9 @@ def segment_linear_scan(a, b, offsets=None, *, exclusive: bool = False,
         accum_dtype: Accumulation dtype override.
         precision: Engine precision, forwarded to the underlying
             :func:`repro.core.linrec.linear_scan` (dispatch rule 9).
+        nonfinite: Non-finite input policy (dispatch rule 10) —
+            ``"sanitize"`` maps non-finite elements to the affine identity
+            (``a -> 1``, ``b -> 0``).
 
     Returns:
         The per-segment recurrence, broadcast shape of ``a``/``b``, in the
@@ -418,7 +442,10 @@ def segment_linear_scan(a, b, offsets=None, *, exclusive: bool = False,
 
     Raises:
         ValueError: If an explicit non-default ``precision`` is combined
-            with an explicit ``method="vector"``.
+            with an explicit ``method="vector"``, or the offsets break the
+            CSR contract.
+        repro.core.guards.NonFiniteError: Under ``nonfinite="raise"`` with
+            concrete non-finite coefficients.
 
     Example:
         >>> import jax.numpy as jnp
@@ -430,7 +457,10 @@ def segment_linear_scan(a, b, offsets=None, *, exclusive: bool = False,
         ...                     initial=1.0).tolist()
         [3.0, 7.0, 3.0, 7.0, 15.0]
     """
-    a, offsets = _unwrap(a, offsets)
+    a, offsets = _unwrap(a, offsets, op="segment_linear_scan")
+    nf = guards.resolve_nonfinite(nonfinite)
+    a = guards.apply_nonfinite(a, nf, op="segment_linear_scan", identity=1.0)
+    b = guards.apply_nonfinite(b, nf, op="segment_linear_scan", identity=0.0)
     shp = jnp.broadcast_shapes(a.shape, b.shape)
     a = jnp.broadcast_to(a, shp)
     b = jnp.broadcast_to(b, shp)
@@ -632,10 +662,9 @@ def segment_sort(values, offsets=None, *, descending: bool = False,
         >>> v.tolist(), i.tolist()
         ([1, 3, 2, 5, 9], [1, 0, 3, 4, 2])
     """
-    if not 1 <= bits_per_pass <= 8:
-        raise ValueError(
-            f"bits_per_pass must be in [1, 8], got {bits_per_pass}")
-    values, offsets = _unwrap(values, offsets)
+    bits_per_pass = guards.validate_bits_per_pass(bits_per_pass,
+                                                  op="segment_sort")
+    values, offsets = _unwrap(values, offsets, op="segment_sort")
     if values.ndim != 1:
         raise ValueError("segment_sort expects 1-D packed values")
     n = values.shape[-1]
@@ -757,11 +786,73 @@ def segment_softmax(values, offsets=None, *, method: str = "auto",
     return e / jnp.take(denom, ids)
 
 
+def _segment_greedy(values, offsets, n: int, num_segments: int) -> jax.Array:
+    """Per-segment argmax as a segment-local id — NaN as ``-inf``, ties low.
+
+    The deterministic greedy fallback of dispatch rule 10: used for
+    ``temperature == 0`` and for ``nonfinite="sanitize"`` on poisoned
+    segments.  A segment whose entries are all ``-inf`` resolves to local
+    id 0 (matching the batched sampler's convention).
+    """
+    x = jnp.asarray(values).astype(jnp.float32)
+    x = jnp.where(jnp.isnan(x), -jnp.inf, x)
+    ids = segment_ids(offsets, n)
+    m = jax.ops.segment_max(x, ids, num_segments=num_segments,
+                            indices_are_sorted=True)
+    cand = jnp.where(x == jnp.take(m, ids), jnp.arange(n, dtype=jnp.int32),
+                     jnp.asarray(n, jnp.int32))
+    first = jax.ops.segment_min(cand, ids, num_segments=num_segments,
+                                indices_are_sorted=True)
+    return jnp.clip(first - offsets[:-1], 0, None).astype(jnp.int32)
+
+
+def _reject_poisoned_packed_logits(values, offsets, n: int,
+                                   num_segments: int) -> None:
+    """The packed ``nonfinite="raise"`` gate for :func:`segment_top_p_sample`.
+
+    ``-inf`` entries are legitimate vocab masks; what is rejected is NaN,
+    ``+inf``, and any non-empty segment with no finite entry (no valid
+    sample exists).  Concrete payloads raise
+    :class:`repro.core.guards.NonFiniteError` eagerly; traced payloads stage
+    a checkified assertion (fires through :func:`repro.core.guards.checked`).
+    """
+    if guards.is_concrete(values) and guards.is_concrete(offsets):
+        v = np.asarray(values, dtype=np.float32)
+        off = np.asarray(offsets)
+        bad = bool(np.isnan(v).any() or np.isposinf(v).any())
+        if not bad:
+            finite = np.isfinite(v)
+            for i in range(off.shape[0] - 1):
+                seg = finite[off[i]:off[i + 1]]
+                if seg.size and not seg.any():
+                    bad = True
+                    break
+        if bad:
+            raise guards.NonFiniteError(
+                "segment_top_p_sample: poisoned logits under "
+                "nonfinite='raise' — NaN, +inf, or a segment with no finite "
+                "entry (-inf vocab masks are allowed)")
+    else:
+        from jax.experimental import checkify
+        x = jnp.asarray(values).astype(jnp.float32)
+        ids = segment_ids(offsets, n)
+        has_finite = jax.ops.segment_max(
+            jnp.isfinite(x).astype(jnp.int32), ids,
+            num_segments=num_segments, indices_are_sorted=True)
+        lens = offsets[1:] - offsets[:-1]
+        ok = (~jnp.any(jnp.isnan(x)) & ~jnp.any(jnp.isposinf(x))
+              & jnp.all((has_finite > 0) | (lens == 0)))
+        checkify.debug_check(
+            ok, "segment_top_p_sample: poisoned logits under "
+                "nonfinite='raise'")
+
+
 def segment_top_p_sample(values, offsets=None, key=None, p: float = 0.9,
                          temperature: float = 1.0, *, method: str = "auto",
                          bits_per_pass: int = 4, is_probs: bool = False,
                          u: Optional[jax.Array] = None, tile_s: int = 128,
-                         block_tiles: int = 8) -> jax.Array:
+                         block_tiles: int = 8,
+                         nonfinite: str = "propagate") -> jax.Array:
     """Nucleus-sample every segment of a packed ragged batch in one launch.
 
     The packed analogue of :func:`repro.core.primitives.top_p_sample`:
@@ -781,7 +872,10 @@ def segment_top_p_sample(values, offsets=None, key=None, p: float = 0.9,
             threshold comparison (a flat packed scan accumulates
             differently from per-row scans — the module's float contract).
         p: Nucleus mass threshold in ``(0, 1]``.
-        temperature: Logit divisor applied before the softmax.
+        temperature: Logit divisor applied before the softmax;
+            ``temperature == 0`` is the deterministic greedy limit
+            (per-segment argmax, ties to the lowest id — no uniform is
+            consumed).
         method: One of ``METHODS`` for every scan-shaped step.
         bits_per_pass: Bits retired per radix pass of the key sort.
         is_probs: If true, ``values`` are already per-segment probabilities
@@ -790,10 +884,20 @@ def segment_top_p_sample(values, offsets=None, key=None, p: float = 0.9,
             draw (deterministic replay / parity testing).
         tile_s: Tile side for the mask scans.
         block_tiles: Tiles per block for ``method="blocked"``.
+        nonfinite: Non-finite logits policy (dispatch rule 10) —
+            ``"raise"`` rejects NaN / ``+inf`` / fully-masked segments
+            (``-inf`` vocab masks stay legal); ``"sanitize"`` maps poisoned
+            segments to the deterministic per-segment greedy fallback.
 
     Returns:
         ``(num_segments,)`` int32 sampled *segment-local* token ids (0 for
         empty segments).
+
+    Raises:
+        ValueError: If ``p`` is outside ``[0, 1]`` or ``temperature`` is
+            negative / non-finite, or the offsets break the CSR contract.
+        repro.core.guards.NonFiniteError: Under ``nonfinite="raise"`` with
+            concrete poisoned logits.
 
     Example:
         >>> import jax, jax.numpy as jnp
@@ -802,13 +906,23 @@ def segment_top_p_sample(values, offsets=None, key=None, p: float = 0.9,
         ...                      jax.random.PRNGKey(0), p=0.9).tolist()
         [1, 1]
     """
-    values, offsets = _unwrap(values, offsets)
+    values, offsets = _unwrap(values, offsets, op="segment_top_p_sample")
+    guards.validate_probability(p, op="segment_top_p_sample")
+    guards.validate_temperature(temperature, op="segment_top_p_sample")
+    nonfinite = guards.resolve_nonfinite(nonfinite)
     n = values.shape[-1]
     num_segments = offsets.shape[0] - 1
     if n == 0:  # all segments empty: the documented 0-per-segment result
         return jnp.zeros((num_segments,), jnp.int32)
+    if not is_probs and guards.is_concrete(temperature) \
+            and float(temperature) == 0.0:
+        seg_lens = offsets[1:] - offsets[:-1]
+        greedy = _segment_greedy(values, offsets, n, num_segments)
+        return jnp.where(seg_lens > 0, greedy, 0).astype(jnp.int32)
     method = maybe_resolve(method, "segment_top_p_sample", n, values.dtype)
     kw = dict(method=method, tile_s=tile_s, block_tiles=block_tiles)
+    if nonfinite == "raise":
+        _reject_poisoned_packed_logits(values, offsets, n, num_segments)
     if is_probs:
         probs = values.astype(jnp.float32)
     else:
@@ -833,4 +947,11 @@ def segment_top_p_sample(values, offsets=None, key=None, p: float = 0.9,
     j = jnp.clip(cnt, 0, jnp.maximum(lens - 1, 0))
     pos = jnp.clip(offsets[:-1] + j, 0, max(n - 1, 0))
     tok = jnp.take(order, pos) - offsets[:-1]
-    return jnp.where(lens > 0, tok, 0).astype(jnp.int32)
+    tok = jnp.where(lens > 0, tok, 0).astype(jnp.int32)
+    if nonfinite == "sanitize":
+        bad = jax.ops.segment_max(
+            (~jnp.isfinite(probs)).astype(jnp.int32), ids,
+            num_segments=num_segments, indices_are_sorted=True) > 0
+        greedy = _segment_greedy(values, offsets, n, num_segments)
+        tok = jnp.where(bad & (lens > 0), greedy, tok)
+    return tok

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import guards
 from repro.core.linrec import _linrec_block, _linrec_matmul, \
     linrec_accum_dtype_for
 
@@ -93,6 +94,9 @@ def linrec_scan_tiles(a: jax.Array, b: jax.Array, *, s: int = 128,
     SMEM scratch carries the running state across tiles (the affine carry's
     ``Π a`` half is never consumed on a sequential walk — module docstring).
     """
+    guards.validate_same_shape(a.shape, b.shape, op="linrec_scan_tiles",
+                               a_name="a", b_name="b")
+    s = guards.validate_positive(s, name="s", op="linrec_scan_tiles")
     if interpret is None:
         interpret = _default_interpret()
     acc = jnp.dtype(accum_dtype) if accum_dtype is not None \
@@ -259,6 +263,11 @@ def linrec_blocked_scan(a: jax.Array, b: jax.Array, *, s: int = 128,
     element read and written once.  Single-block inputs skip phases 1–2 (the
     incoming state is provably zero).
     """
+    guards.validate_same_shape(a.shape, b.shape, op="linrec_blocked_scan",
+                               a_name="a", b_name="b")
+    s = guards.validate_positive(s, name="s", op="linrec_blocked_scan")
+    block_tiles = guards.validate_positive(block_tiles, name="block_tiles",
+                                           op="linrec_blocked_scan")
     if interpret is None:
         interpret = _default_interpret()
     acc = jnp.dtype(accum_dtype) if accum_dtype is not None \

@@ -23,10 +23,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import guards
 from repro.core.precision import pdot
 from repro.core.scan import accum_dtype_for
 
-__all__ = ["scan_tiles", "scan_mm_kernel"]
+__all__ = ["scan_tiles", "scan_mm_kernel", "VARIANTS"]
+
+# The two tile-scan algorithms of the paper (Alg. 1 ScanU / Alg. 2 ScanUL1).
+VARIANTS = ("scanul1", "scanu")
 
 
 def _kernel(x_ref, o_ref, carry_ref, *, variant: str, acc, precision: str):
@@ -92,6 +96,9 @@ def scan_tiles(x: jax.Array, *, s: int = 128, variant: str = "scanul1",
                accum_dtype=None, interpret: bool | None = None,
                precision: str = "highest") -> jax.Array:
     """Scan the last axis of ``x`` (any leading batch dims) with the fused kernel."""
+    variant = guards.validate_choice(variant, VARIANTS, name="variant",
+                                     op="scan_tiles")
+    s = guards.validate_positive(s, name="s", op="scan_tiles")
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     acc = jnp.dtype(accum_dtype) if accum_dtype is not None else accum_dtype_for(x.dtype)

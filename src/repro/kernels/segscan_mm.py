@@ -58,6 +58,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import guards
 from repro.core.precision import pdot
 from repro.core.scan import _operand_dtype, accum_dtype_for
 
@@ -207,6 +208,9 @@ def seg_scan_tiles(x: jax.Array, flags: jax.Array, *, s: int = 128,
     SMEM-carried running partial of ``scan_mm``; the carry is gated by the
     in-tile ``seen`` mask so it never crosses a boundary.
     """
+    guards.validate_broadcastable_to(jnp.shape(flags), x.shape,
+                                     op="seg_scan_tiles")
+    s = guards.validate_positive(s, name="s", op="seg_scan_tiles")
     if interpret is None:
         interpret = _default_interpret()
     acc = jnp.dtype(accum_dtype) if accum_dtype is not None \
@@ -365,6 +369,11 @@ def seg_blocked_scan(x: jax.Array, flags: jax.Array, *, s: int = 128,
     *segmented* carry scan over them, and fused phases 1+3 produce the final
     segmented scan with each element read and written once.
     """
+    guards.validate_broadcastable_to(jnp.shape(flags), x.shape,
+                                     op="seg_blocked_scan")
+    s = guards.validate_positive(s, name="s", op="seg_blocked_scan")
+    block_tiles = guards.validate_positive(block_tiles, name="block_tiles",
+                                           op="seg_blocked_scan")
     if interpret is None:
         interpret = _default_interpret()
     acc = jnp.dtype(accum_dtype) if accum_dtype is not None \

@@ -46,6 +46,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import guards
+
 __all__ = ["split_tiles", "multi_split_tiles", "radix_pass_multibit",
            "topp_mask_sample_tiles"]
 
@@ -145,6 +147,8 @@ def split_tiles(x: jax.Array, flags: jax.Array, *, s: int = 128,
     ``x``: (..., n) payload; ``flags``: same shape, boolean/int.  One kernel
     launch per batch row; the row (padded to a multiple of ``s``) lives in VMEM.
     """
+    guards.validate_same_shape(x.shape, jnp.shape(flags), op="split_tiles")
+    s = guards.validate_positive(s, name="s", op="split_tiles")
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     *lead, n = x.shape
@@ -205,6 +209,11 @@ def multi_split_tiles(x: jax.Array, digits: jax.Array, *, num_buckets: int,
     multiple of ``s`` with the maximum digit, so padding stays at the tail)
     lives in VMEM.  ``counts`` has shape ``(..., num_buckets)``.
     """
+    guards.validate_same_shape(x.shape, jnp.shape(digits),
+                               op="multi_split_tiles", b_name="digits")
+    num_buckets = guards.validate_positive(num_buckets, name="num_buckets",
+                                           op="multi_split_tiles")
+    s = guards.validate_positive(s, name="s", op="multi_split_tiles")
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     *lead, n = x.shape
@@ -325,6 +334,7 @@ def topp_mask_sample_tiles(sorted_p: jax.Array, u: jax.Array, *, p: float,
     scalar per row leaving VMEM.  Both prefix sums use the VPU cumsum so the
     result is bit-identical to the unfused ``method="vector"`` sampler.
     """
+    guards.validate_probability(p, op="topp_mask_sample_tiles")
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     *lead, n = sorted_p.shape

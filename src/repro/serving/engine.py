@@ -16,7 +16,9 @@ from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core import guards
 from repro.core.primitives import METHODS, top_p_sample
 from repro.core.segmented import SegmentedBatch, segment_top_p_sample
 from repro.models.model import build_model
@@ -31,12 +33,15 @@ class ServeEngine:
                  top_p: float = 0.9, temperature: float = 1.0,
                  sampler: str = "topp_scan", bits_per_pass: int = 4,
                  scan_method: Optional[str] = None):
-        if sampler not in self.SAMPLERS:
-            raise ValueError(
-                f"unknown sampler {sampler!r}; expected one of {self.SAMPLERS}")
-        if not 1 <= bits_per_pass <= 8:  # eager: fail at construction, not in jit
-            raise ValueError(
-                f"bits_per_pass must be in [1, 8], got {bits_per_pass}")
+        sampler = guards.validate_choice(sampler, self.SAMPLERS,
+                                         name="sampler", op="ServeEngine")
+        # eager: fail at construction, not in jit
+        bits_per_pass = guards.validate_bits_per_pass(bits_per_pass,
+                                                      op="ServeEngine")
+        guards.validate_probability(top_p, name="top_p", op="ServeEngine")
+        guards.validate_temperature(temperature, op="ServeEngine")
+        max_len = guards.validate_positive(max_len, name="max_len",
+                                           op="ServeEngine")
         if scan_method is not None:
             if scan_method != "auto" and scan_method not in METHODS:
                 raise ValueError(f"unknown scan_method {scan_method!r}; "
@@ -54,7 +59,22 @@ class ServeEngine:
         self.bits_per_pass = bits_per_pass
         self.model = build_model(cfg)
         self._prefill = jax.jit(self._prefill_impl)
-        self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
+        if guards.checks_enabled():
+            # checkified decode: staged guard_check assertions (pos < max_len)
+            # fire as JaxRuntimeError.  checkify does not compose with donated
+            # buffers, so this path re-uses the cache allocation instead.
+            from jax.experimental import checkify
+            cdec = jax.jit(checkify.checkify(self._decode_impl,
+                                             errors=checkify.user_checks))
+
+            def _decode_checked(params, caches, tok, pos, key):
+                err, out = cdec(params, caches, tok, pos, key)
+                err.throw()
+                return out
+
+            self._decode = _decode_checked
+        else:
+            self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
 
     # ---- sampling (the paper's operator) ----
     def _sample(self, logits, key):
@@ -103,23 +123,67 @@ class ServeEngine:
 
     def _decode_impl(self, params, caches, tok, pos, key):
         with use_mesh(self.mesh):
+            guards.guard_check(lambda: pos < self.max_len,
+                               "decode: pos must stay below max_len (the KV "
+                               "cache budget) — raise max_len= at engine "
+                               "construction")
             logits, caches = self.model.decode_step(params, tok[:, None],
                                                     caches, pos)
             new_tok = self._sample(logits, key)
             return new_tok, caches
 
-    def generate(self, batch: Dict, max_new_tokens: int, key) -> jnp.ndarray:
-        """batch: model inputs incl. "tokens" (B,S).  Returns (B, new_tokens)."""
+    def generate(self, batch: Dict, max_new_tokens: int, key, *,
+                 eos_id: Optional[int] = None) -> jnp.ndarray:
+        """Generate up to ``max_new_tokens`` tokens per row.
+
+        ``batch``: model inputs incl. ``"tokens"`` (B, S).  Returns
+        ``(B, new_tokens)`` int32 — ``new_tokens == max_new_tokens``, or
+        fewer when ``eos_id`` is set and every row finished early
+        (``max_new_tokens == 0`` returns an empty ``(B, 0)`` array without
+        touching the model).
+
+        Args:
+            batch: Model inputs including ``"tokens"`` of shape (B, S).
+            max_new_tokens: Number of tokens to decode (>= 0).
+            key: PRNG key for the samplers.
+            eos_id: Optional end-of-sequence token id.  Rows that emit it
+                keep emitting it (their KV entries are not advanced with new
+                content), and decoding stops once every row has finished.
+
+        Raises:
+            ValueError: If ``max_new_tokens`` is negative, or the request
+                does not fit the KV cache budget
+                (``prompt_len + cache_offset + max_new_tokens > max_len``).
+        """
         tokens = batch["tokens"]
         b, s = tokens.shape
         off = self.cfg.n_img_tokens if self.cfg.family == "vlm" else 0
+        if max_new_tokens < 0:
+            raise ValueError(
+                f"generate: max_new_tokens must be >= 0, got {max_new_tokens}")
+        if s + off + max_new_tokens > self.max_len:
+            raise ValueError(
+                f"generate: prompt ({s} tokens) + cache offset ({off}) + "
+                f"max_new_tokens ({max_new_tokens}) = "
+                f"{s + off + max_new_tokens} overflows the KV cache budget "
+                f"(max_len={self.max_len}); raise max_len= at engine "
+                "construction or shorten the request")
+        if max_new_tokens == 0:
+            return jnp.zeros((b, 0), jnp.int32)
         key, k0 = jax.random.split(key)
         tok, caches = self._prefill(self.params, batch, k0)
+        done = np.asarray(tok) == eos_id if eos_id is not None else None
         out = [tok]
         pos = s + off
         for i in range(max_new_tokens - 1):
+            if done is not None and bool(done.all()):
+                break  # every row emitted eos_id — stop early
             key, k = jax.random.split(key)
             tok, caches = self._decode(self.params, caches, tok,
                                        jnp.asarray(pos + i, jnp.int32), k)
+            if done is not None:
+                tok = jnp.where(jnp.asarray(done),
+                                jnp.asarray(eos_id, tok.dtype), tok)
+                done = done | (np.asarray(tok) == eos_id)
             out.append(tok)
         return jnp.stack(out, axis=1)

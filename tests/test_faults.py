@@ -1,0 +1,200 @@
+"""Fault injection (ISSUE 8): every fault lands on a documented contract.
+
+Each test injects one fault class through a public operator and asserts the
+outcome :func:`repro.analysis.faults.classify` reports is the contracted one
+— ``value``/``type`` (eager validation), ``nonfinite`` (policy raise),
+``checkified`` (staged assertion), ``degraded`` (probe fallback), or ``ok``
+(propagate / sanitize semantics).  Anything else — a crash inside a kernel, a
+silent wrong answer — fails the suite.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.faults import (
+    OUTCOMES, adversarial_params, checks, classify, corrupt_offsets,
+    force_probe_failure, inject_nonfinite,
+)
+from repro.core import guards
+from repro.core.linrec import linear_scan
+from repro.core.primitives import split, top_p_sample, weighted_sample
+from repro.core.scan import scan
+from repro.core.segmented import segment_scan, segment_top_p_sample
+
+OFF = jnp.asarray([0, 3, 5])
+X5 = jnp.asarray([1.0, 2.0, 3.0, 4.0, 5.0])
+U2 = jnp.asarray([[0.5], [0.5]])
+
+
+# ---------------------------------------------------------------------------
+# non-finite payloads
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["nan", "inf", "-inf", "extreme"])
+def test_nonfinite_payload_propagates_by_default(kind):
+    x = inject_nonfinite(X5, kind, frac=0.2, seed=3)
+    with checks(False):   # propagate is the *unchecked* IEEE contract
+        outcome, out = classify(scan, x)
+    assert outcome == "ok"
+    if kind != "extreme":   # extreme payloads are finite until accumulated
+        assert not bool(jnp.isfinite(out).all())
+
+
+@pytest.mark.parametrize("kind", ["nan", "inf", "-inf"])
+@pytest.mark.parametrize("op", ["scan", "linrec", "segment_scan"])
+def test_nonfinite_payload_raises_under_policy(kind, op):
+    x = inject_nonfinite(X5, kind, frac=0.2, seed=4)
+    fns = {
+        "scan": lambda v: scan(v, nonfinite="raise"),
+        "linrec": lambda v: linear_scan(v, v, nonfinite="raise"),
+        "segment_scan": lambda v: segment_scan(v, OFF, nonfinite="raise"),
+    }
+    outcome, detail = classify(fns[op], x)
+    assert outcome == "nonfinite", (op, kind, detail)
+
+
+@pytest.mark.parametrize("kind", ["nan", "inf"])
+def test_nonfinite_payload_sanitizes_to_identity(kind):
+    x = inject_nonfinite(X5, kind, frac=0.2, seed=5)
+    outcome, out = classify(scan, x, nonfinite="sanitize")
+    assert outcome == "ok"
+    assert bool(jnp.isfinite(out).all())
+    ref = scan(jnp.where(jnp.isfinite(x), x, 0.0))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref))
+
+
+def test_nan_logits_sampler_contracts():
+    logits = inject_nonfinite(jnp.zeros((2, 8)), "nan", frac=0.2, seed=6)
+    u = jnp.asarray([[0.5], [0.5]])
+    with checks(False):
+        outcome, _ = classify(top_p_sample, logits, None, u=u)
+    assert outcome == "ok"                                    # propagate
+    outcome, _ = classify(top_p_sample, logits, None, u=u, nonfinite="raise")
+    assert outcome == "nonfinite"
+    outcome, tok = classify(top_p_sample, logits, None, u=u,
+                            nonfinite="sanitize")
+    assert outcome == "ok"
+    assert tok.shape == (2,) and bool(jnp.all(tok >= 0))
+
+
+def test_checkified_cdf_assertion_fires():
+    """The staged finite-CDF check catches NaN weights under REPRO_CHECKS."""
+    w = jnp.asarray([0.2, float("nan"), 0.1])
+
+    def f(wv):
+        return weighted_sample(wv, None, u=jnp.asarray(0.5))
+
+    with checks():
+        outcome, detail = classify(guards.checked(f), w)
+    assert outcome == "checkified", detail
+
+
+# ---------------------------------------------------------------------------
+# corrupted offsets
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode,expected", [
+    ("unsorted", "value"), ("negative", "value"), ("overrun", "value"),
+    ("head", "value"), ("float", "type"),
+])
+def test_corrupted_offsets_rejected_eagerly(mode, expected):
+    bad = corrupt_offsets(OFF, mode)
+    if mode == "float":
+        # the public entries cast concrete offsets to int32 on the way in;
+        # the validator itself owns the TypeError contract
+        with pytest.raises(TypeError):
+            guards.validate_offsets(bad, 5, op="segment_scan")
+        return
+    outcome, detail = classify(segment_scan, X5, bad)
+    assert outcome == expected, (mode, detail)
+
+
+@pytest.mark.parametrize("mode", ["unsorted", "negative", "overrun", "head"])
+def test_corrupted_offsets_traced_hit_checkified_contract(mode):
+    """Under jit the offsets are tracers: the CSR check stages instead."""
+    bad = corrupt_offsets(OFF, mode)
+
+    def f(values, offsets):
+        return segment_scan(values, offsets)
+
+    with checks():
+        outcome, detail = classify(guards.checked(jax.jit(f)), X5, bad)
+    assert outcome == "checkified", (mode, detail)
+
+
+# ---------------------------------------------------------------------------
+# adversarial sampler parameters
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("which,expected", [
+    ("p_over", "value"), ("p_under", "value"), ("p_nan", "value"),
+    ("temp_negative", "value"), ("temp_nan", "value"), ("temp_inf", "value"),
+    ("temp_zero", "ok"),
+])
+def test_adversarial_sampler_params(which, expected):
+    logits = jnp.asarray([[0.0, 1.0, 5.0]])
+    kw = adversarial_params(which)
+    outcome, detail = classify(top_p_sample, logits, None,
+                               u=jnp.asarray([[0.5]]), **kw)
+    assert outcome == expected, (which, detail)
+    out2, detail2 = classify(segment_top_p_sample, logits[0],
+                             jnp.asarray([0, 3]), None,
+                             u=jnp.asarray([[0.5]]), **kw)
+    assert out2 == expected, (which, detail2)
+
+
+def test_unsupported_sort_dtype_hits_type_contract():
+    """float64 keys have no sortable-int encoding: a documented TypeError."""
+    from repro.core.primitives import radix_sort
+
+    x = jnp.asarray([3.0, 1.0, 2.0]).astype(jnp.float32)
+    outcome, _ = classify(radix_sort, x)
+    assert outcome == "ok"
+    outcome, detail = classify(radix_sort, np.asarray([3.0, 1.0], np.float64))
+    assert outcome == "type", detail
+
+
+def test_temperature_zero_is_argmax():
+    logits = jnp.asarray([[0.0, 9.0, 1.0], [3.0, 0.0, 0.0]])
+    tok = top_p_sample(logits, None, temperature=0.0)
+    assert tok.tolist() == [1, 0]
+
+
+# ---------------------------------------------------------------------------
+# lowering failures degrade, not crash
+# ---------------------------------------------------------------------------
+
+
+def test_lowering_failure_degrades_scan():
+    from repro.core.autotune import _WARNED
+    _WARNED.clear()
+    with force_probe_failure():
+        outcome, out = classify(scan, X5, method="kernel", tile_s=8)
+    _WARNED.clear()
+    assert outcome == "degraded"
+
+
+def test_lowering_failure_result_matches_fallback():
+    from repro.core.autotune import _WARNED
+    _WARNED.clear()
+    x = jnp.asarray(np.random.default_rng(0).integers(0, 9, 64), jnp.int32)
+    f = jnp.asarray(np.random.default_rng(1).integers(0, 2, 64), jnp.int8)
+    with force_probe_failure():
+        import warnings
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            z, ind, cnt = split(x, f, method="kernel", tile_s=8)
+    _WARNED.clear()
+    zr, indr, cntr = split(x, f, method="vector", tile_s=8)
+    np.testing.assert_array_equal(np.asarray(z), np.asarray(zr))
+    np.testing.assert_array_equal(np.asarray(ind), np.asarray(indr))
+    assert int(cnt) == int(cntr)
+
+
+def test_outcomes_closed_set():
+    assert set(OUTCOMES) == {"ok", "value", "type", "nonfinite",
+                             "checkified", "degraded"}

@@ -76,3 +76,61 @@ def test_serve_engine_rejects_unknown_scan_method():
         assert "scan_method" in str(e)
     else:  # pragma: no cover
         raise AssertionError("expected ValueError for unknown scan_method")
+
+
+def _tiny_engine(max_len=32, **kw):
+    from repro.models.model import build_model
+
+    cfg = get_config("llama3-8b", smoke=True)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    return ServeEngine(cfg, params, max_len=max_len, sampler="greedy", **kw)
+
+
+def test_generate_zero_tokens_returns_empty():
+    """max_new_tokens=0 must return (B, 0), not a stray prefill token."""
+    eng = _tiny_engine()
+    batch = {"tokens": jnp.ones((2, 4), jnp.int32)}
+    out = eng.generate(batch, 0, jax.random.PRNGKey(0))
+    assert out.shape == (2, 0)
+    import pytest
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.generate(batch, -1, jax.random.PRNGKey(0))
+
+
+def test_generate_rejects_kv_cache_overflow():
+    """prompt + max_new_tokens past max_len fails eagerly, not silently."""
+    import pytest
+
+    eng = _tiny_engine(max_len=16)
+    batch = {"tokens": jnp.ones((1, 8), jnp.int32)}
+    assert eng.generate(batch, 8, jax.random.PRNGKey(0)).shape == (1, 8)
+    with pytest.raises(ValueError, match="KV cache budget"):
+        eng.generate(batch, 9, jax.random.PRNGKey(0))
+
+
+def test_generate_eos_early_exit():
+    """eos_id= stops decoding once every row emitted it; finished rows pad."""
+    eng = _tiny_engine()
+    batch = {"tokens": jnp.ones((2, 4), jnp.int32)}
+    key = jax.random.PRNGKey(0)
+    full = np.asarray(eng.generate(batch, 6, key))      # greedy: deterministic
+    eos = int(full[0, 2])
+    out = np.asarray(eng.generate(batch, 6, key, eos_id=eos))
+    assert out.shape[0] == 2 and out.shape[1] <= 6
+    # prefix before each row's eos matches the unrestricted decode
+    for r in range(2):
+        hits = np.nonzero(full[r] == eos)[0]
+        stop = int(hits[0]) if hits.size else out.shape[1] - 1
+        np.testing.assert_array_equal(out[r, :stop + 1],
+                                      full[r, :stop + 1])
+        assert np.all(out[r, stop:] == eos) or hits.size == 0
+
+
+def test_serve_engine_validates_sampler_params():
+    import pytest
+
+    cfg = get_config("llama3-8b", smoke=True)
+    for kw in (dict(bits_per_pass=0), dict(bits_per_pass=9),
+               dict(top_p=1.5), dict(temperature=-1.0), dict(max_len=0)):
+        with pytest.raises(ValueError):
+            ServeEngine(cfg, None, **kw)
