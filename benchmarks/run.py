@@ -32,6 +32,11 @@ the TPU-side projection lives in EXPERIMENTS.md §Roofline).
                  engine methods: time + max-ulp-vs-fp64 per op × method ×
                  precision, gated against the documented ulp bound
                  -> BENCH_precision.json
+  serve          continuous batching under a seeded Poisson arrival trace:
+                 paged-KV ContinuousEngine vs the dense sequential baseline,
+                 tokens/s + p50/p99 per-token step latency + page-pool
+                 utilization, plus a trace-only guard that decode_n stages
+                 exactly one while_loop -> BENCH_serve.json
 """
 from __future__ import annotations
 
@@ -604,6 +609,82 @@ def ops_operators(smoke: bool):
     ops_top_p(1024 if smoke else 16384, batch=2 if smoke else 4)
 
 
+# ---------------------------------------------------------------------------
+# serve: continuous batching under Poisson arrivals (ISSUE 9 tentpole)
+# ---------------------------------------------------------------------------
+
+
+def serve_sweep(smoke=False):
+    """Continuous-batching serve sweep under Poisson arrivals -> BENCH_serve.json.
+
+    A seeded ragged request trace is served by ``ContinuousEngine`` (paged KV
+    + in-graph ``decode_n``), against the dense sequential baseline (each
+    request alone through ``ServeEngine.generate`` — the ``kv_layout="dense"``
+    path).  The trace-only launch guard asserts ``decode_n`` stages exactly
+    one ``while_loop`` (no per-token dispatch) and aborts the run otherwise —
+    the bench-smoke CI gate.  With ``eos_id=None`` every schedule-derived
+    metric (tokens, steps, peak pages, p50/p99 step latencies) is a pure
+    function of the seeded trace — independent of model numerics — so
+    ``tools/compare_bench.py`` gates them exactly; tokens/s stays a timing.
+    """
+    import time
+
+    from repro.models.model import build_model, get_config
+    from repro.serving.engine import ServeEngine
+    from repro.serving.scheduler import (ContinuousEngine, count_while_loops,
+                                         poisson_trace)
+
+    cfg = get_config("llama3-8b", smoke=True)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    page_size = 8
+    grids = [(3, 13, 4, 0.4, 8)] if smoke else \
+        [(4, 25, 8, 0.5, 16), (8, 49, 8, 1.0, 24)]
+    for max_batch, n_pages, tick, rate, n_reqs in grids:
+        eng = ContinuousEngine(cfg, params, max_batch=max_batch,
+                               page_size=page_size, n_pages=n_pages,
+                               max_len=32, sampler="greedy", tick_tokens=tick)
+        n_while = count_while_loops(eng.decode_n_jaxpr(tick))
+        row(f"serve/trace_guard/decode_n/B={max_batch}", 0.0,
+            f"while_loops={n_while};expected=1")
+        if n_while != 1:
+            raise SystemExit(
+                f"serve launch guard: decode_n staged {n_while} while_loops, "
+                "expected exactly 1 (multi-token decode must be one in-graph "
+                "loop, not per-token dispatch)")
+        trace = poisson_trace(n_reqs, rate=rate, vocab_size=cfg.vocab_size,
+                              seed=17, prompt_len=(3, 10), max_new=(2, 8))
+        eng.run(trace)                  # warmup: compile prefill/decode
+        t0 = time.perf_counter()
+        res = eng.run(trace)
+        dt = time.perf_counter() - t0
+        st = res["stats"]
+        lat = np.asarray(sorted(r["per_token_latency_steps"]
+                                for r in res["requests"].values()))
+        row(f"serve/continuous/B={max_batch}/pages={n_pages}/rate={rate}", dt,
+            f"tokens={st['total_tokens']};reqs={st['reqs']};"
+            f"steps={st['steps']};peak_pages={st['peak_pages']};"
+            f"util={st['peak_util']:.3f};"
+            f"p50_steps={np.percentile(lat, 50):.3f};"
+            f"p99_steps={np.percentile(lat, 99):.3f};"
+            f"tokens_per_s={st['total_tokens'] / dt:.1f}")
+        dense = ServeEngine(cfg, params, max_len=eng.n_blocks * page_size,
+                            sampler="greedy")
+        for r in trace:                 # warmup compiles per prompt length
+            dense.generate({"tokens": jnp.asarray(r.tokens)[None]},
+                           r.max_new_tokens, jnp.asarray(r.key))
+        t0 = time.perf_counter()
+        total = 0
+        for r in trace:
+            total += dense.generate(
+                {"tokens": jnp.asarray(r.tokens)[None]}, r.max_new_tokens,
+                jnp.asarray(r.key)).shape[1]
+        dt_d = time.perf_counter() - t0
+        row(f"serve/dense_sequential/B={max_batch}/rate={rate}", dt_d,
+            f"tokens={total};reqs={n_reqs};"
+            f"tokens_per_s={total / dt_d:.1f};"
+            f"continuous_speedup={dt_d / dt:.2f}x")
+
+
 def guards_identity_guard():
     """Assert guards-off traces are byte-identical to ``guards_disabled``.
 
@@ -675,14 +756,15 @@ def main() -> None:
         "linrec": lambda: linrec_sweep(smoke=args.smoke),
         "precision": lambda: precision_sweep(smoke=args.smoke),
         "ops": lambda: ops_operators(smoke=args.smoke),
+        "serve": lambda: serve_sweep(smoke=args.smoke),
         "guards": guards_identity_guard,
     }
     only = set(args.only.split(",")) if args.only else None
     if args.smoke and only is None:
         # fast, single-process sections (sort carries the pass-count guard,
-        # guards carries the jaxpr-identity guard)
+        # serve the while-loop launch guard, guards the jaxpr-identity guard)
         only = {"fig3", "fig10", "fig11", "scan_pipeline", "sort", "segscan",
-                "linrec", "precision", "ops", "guards"}
+                "linrec", "precision", "ops", "serve", "guards"}
     print("name,us_per_call,derived")
     for name, fn in sections.items():
         if only and name not in only:

@@ -10,11 +10,30 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import guards
 from repro.models.layers import (apply_rope, linear, ninit,
                                  rmsnorm, rmsnorm_init, softcap)
 from repro.utils.sharding import constrain
 
 F32 = jnp.float32
+
+
+def _cache_len(cache_len, s: int, *, op: str) -> int:
+    """Resolve the KV-cache length for a prefill of ``s`` tokens.
+
+    ``cache_len=None`` means "size the cache to the prompt"; any explicit
+    value must be a positive int >= ``s`` (``cache_len=0`` used to fall
+    through a falsy-``or`` onto ``s`` silently, and a cache shorter than the
+    prompt would silently clip the out-of-bounds scatter).
+    """
+    if cache_len is None:
+        return s
+    clen = guards.validate_positive(cache_len, name="cache_len", op=op)
+    if clen < s:
+        raise ValueError(f"{op}: cache_len ({clen}) is shorter than the "
+                         f"prefill length ({s}); the KV cache must hold at "
+                         "least the prompt")
+    return clen
 
 
 # ---------------------------------------------------------------------------
@@ -148,21 +167,33 @@ def attn_full(p, x, cfg, *, positions=None, causal=True, window=None,
     y = linear({"w": p["wo"]}, out)
     if not return_cache:
         return y
-    clen = cache_len or s
+    clen = _cache_len(cache_len, s, op="attn_full")
     kc = jnp.zeros((b, clen, kh, hd), x.dtype).at[:, :s].set(k.astype(x.dtype))
     vc = jnp.zeros((b, clen, kh, hd), x.dtype).at[:, :s].set(v.astype(x.dtype))
     return y, {"k": kc, "v": vc}
 
 
 def attn_decode(p, x, cfg, cache, pos, *, window=None):
-    """Single-token decode. x: (B,1,D); cache k/v: (B,T,K,D); pos: scalar int."""
+    """Single-token decode. x: (B,1,D); cache k/v: (B,T,K,D).
+
+    ``pos`` is a scalar int (rectangular serving: every row writes/attends at
+    the same position) or a per-row (B,) int32 vector (continuous batching:
+    each row sits at its own depth in its own sequence).
+    """
     b, s, _ = x.shape
     hd = cfg.head_dim_
     kh, gh = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
-    positions = jnp.full((b, s), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    per_row = pos.ndim == 1
+    positions = pos[:, None] if per_row else jnp.full((b, s), pos, jnp.int32)
     q, k, v = _qk(p, x, cfg, positions)
-    kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, 1)
-    vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, 1)
+    if per_row:
+        rows = jnp.arange(b)
+        kc = cache["k"].at[rows, pos].set(k[:, 0].astype(cache["k"].dtype))
+        vc = cache["v"].at[rows, pos].set(v[:, 0].astype(cache["v"].dtype))
+    else:
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, 1)
     # batch==1 (long-context): sequence-parallel cache; else batch over dp with
     # kv-heads over "model" — unless heads don't divide TP, in which case shard
     # the cache TIME axis (flash-decoding style partial softmax) to avoid the
@@ -181,14 +212,66 @@ def attn_decode(p, x, cfg, cache, pos, *, window=None):
     qg = q.reshape(b, s, kh, gh, hd)
     scores = _gqa_scores(qg, kc, hd ** -0.5, cfg.attn_softcap)    # (B,K,G,1,T)
     j = jnp.arange(t)
-    mask = j <= pos
-    if window is not None:
-        mask &= j > (pos - window)
-    scores = jnp.where(mask[None, None, None, None, :], scores, -1e30)
+    if per_row:
+        mask = j[None, :] <= pos[:, None]
+        if window is not None:
+            mask &= j[None, :] > (pos[:, None] - window)
+        mask = mask[:, None, None, None, :]
+    else:
+        mask = j <= pos
+        if window is not None:
+            mask &= j > (pos - window)
+        mask = mask[None, None, None, None, :]
+    scores = jnp.where(mask, scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     out = _gqa_out(probs, vc).astype(x.dtype).reshape(b, s, -1)
     y = linear({"w": p["wo"]}, out)
     return y, {"k": kc, "v": vc}
+
+
+def attn_decode_paged(p, x, cfg, cache, pos, *, window=None):
+    """Single-token decode against a paged KV cache (continuous batching).
+
+    ``cache``: ``{"k"/"v": (P, page, K, D)}`` physical page pools shared by
+    every row, plus ``"pages": (B, nblk)`` int32 per-row page tables mapping
+    logical block ``t // page`` to a pool page.  ``pos``: per-row (B,) int32
+    write positions.  The new k/v land in page ``pages[b, pos//page]`` at
+    slot ``pos % page``; attention then gathers each row's pages back into a
+    contiguous ``(B, nblk*page, K, D)`` view and proceeds exactly like the
+    dense path — same scores, same ``-1e30`` mask, same softmax — so for
+    equal attention length T the result is bitwise identical to
+    :func:`attn_decode` (rule 11 parity contract).  Page id 0 is the
+    allocator's reserved scratch page: rows whose table entries are
+    unassigned write there and never read it back.
+    """
+    b, s, _ = x.shape
+    hd = cfg.head_dim_
+    kh, gh = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.full((b,), pos, jnp.int32)
+    pages = cache["pages"]
+    page = cache["k"].shape[1]
+    q, k, v = _qk(p, x, cfg, pos[:, None])
+    rows = jnp.arange(b)
+    pid = pages[rows, pos // page]
+    slot = pos % page
+    kc = cache["k"].at[pid, slot].set(k[:, 0].astype(cache["k"].dtype))
+    vc = cache["v"].at[pid, slot].set(v[:, 0].astype(cache["v"].dtype))
+    kv_k = kc[pages].reshape(b, -1, kh, hd)            # (B, nblk*page, K, D)
+    kv_v = vc[pages].reshape(b, -1, kh, hd)
+    t = kv_k.shape[1]
+    qg = q.reshape(b, s, kh, gh, hd)
+    scores = _gqa_scores(qg, kv_k, hd ** -0.5, cfg.attn_softcap)
+    j = jnp.arange(t)
+    mask = j[None, :] <= pos[:, None]
+    if window is not None:
+        mask &= j[None, :] > (pos[:, None] - window)
+    scores = jnp.where(mask[:, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, kv_v).astype(x.dtype).reshape(b, s, -1)
+    y = linear({"w": p["wo"]}, out)
+    return y, {"k": kc, "v": vc, "pages": pages}
 
 
 def attn_cross_decode(p, x, cfg, enc_cache):
@@ -271,7 +354,7 @@ def mla_full(p, x, cfg, *, positions=None, return_cache=False, cache_len=None):
     y = linear({"w": p["wo"]}, out.reshape(b, s, -1))
     if not return_cache:
         return y
-    clen = cache_len or s
+    clen = _cache_len(cache_len, s, op="mla_full")
     lat_c = jnp.zeros((b, clen, m.kv_lora_rank), x.dtype).at[:, :s].set(
         latent.astype(x.dtype))
     kr_c = jnp.zeros((b, clen, m.qk_rope_head_dim), x.dtype).at[:, :s].set(

@@ -125,8 +125,13 @@ def _block_apply(p, h, cfg, kind: str, *, positions=None, mode="train",
             y = att.mla_full(p["attn"], hin, cfg, positions=positions)
     else:
         if mode == "decode":
-            y, new_cache = att.attn_decode(p["attn"], hin, cfg, cache, pos,
-                                           window=window)
+            # a "pages" leaf marks the paged KV layout (continuous batching);
+            # plain {"k","v"} caches stay on the dense kv_layout baseline
+            dec = (att.attn_decode_paged if (cache is not None
+                                             and "pages" in cache)
+                   else att.attn_decode)
+            y, new_cache = dec(p["attn"], hin, cfg, cache, pos,
+                               window=window)
         elif mode == "prefill":
             y, new_cache = att.attn_full(p["attn"], hin, cfg, positions=positions,
                                          causal=causal, window=window,
@@ -509,7 +514,8 @@ class TransformerLM:
         return logits[:, -1], caches
 
     def decode_step(self, params, tokens, caches, pos):
-        """tokens: (B,1) int32; pos: scalar int32 (write position)."""
+        """tokens: (B,1) int32; pos: scalar int32 write position, or per-row
+        (B,) int32 for attention-only models (continuous batching)."""
         logits, caches = self._run(params, {"tokens": tokens}, mode="decode",
                                    caches=caches, pos=pos)
         return logits[:, -1], caches

@@ -1,1 +1,14 @@
-"""Serving — ServeEngine decode loop with scan-based top-p sampling."""
+"""Serving — rectangular ServeEngine + continuous-batching ContinuousEngine.
+
+``engine.ServeEngine``: dense (rectangular) prefill/decode with the paper's
+scan-based top-p sampler — the ``kv_layout="dense"`` baseline.
+``scheduler.ContinuousEngine``: FCFS continuous batching over the paged KV
+cache (``paged_kv``), with an in-graph ``lax.while_loop`` multi-token decode.
+"""
+from repro.serving.engine import ServeEngine
+from repro.serving.paged_kv import PageAllocator
+from repro.serving.scheduler import (ContinuousEngine, Request, RequestState,
+                                     count_while_loops, poisson_trace)
+
+__all__ = ["ServeEngine", "ContinuousEngine", "Request", "RequestState",
+           "PageAllocator", "count_while_loops", "poisson_trace"]

@@ -133,7 +133,8 @@ class ServeEngine:
             return new_tok, caches
 
     def generate(self, batch: Dict, max_new_tokens: int, key, *,
-                 eos_id: Optional[int] = None) -> jnp.ndarray:
+                 eos_id: Optional[int] = None,
+                 sync_every: int = 8) -> jnp.ndarray:
         """Generate up to ``max_new_tokens`` tokens per row.
 
         ``batch``: model inputs incl. ``"tokens"`` (B, S).  Returns
@@ -149,11 +150,19 @@ class ServeEngine:
             eos_id: Optional end-of-sequence token id.  Rows that emit it
                 keep emitting it (their KV entries are not advanced with new
                 content), and decoding stops once every row has finished.
+            sync_every: How often (in tokens) the all-rows-done mask is
+                synced to the host when ``eos_id`` is set — the scheduler
+                tick.  The mask itself stays on device; a larger tick means
+                fewer host round-trips but up to ``sync_every - 1`` wasted
+                decode steps after the last row finishes.  The returned
+                tokens are bit-identical for every ``sync_every >= 1``
+                (over-decoded trailing columns are trimmed).
 
         Raises:
-            ValueError: If ``max_new_tokens`` is negative, or the request
-                does not fit the KV cache budget
-                (``prompt_len + cache_offset + max_new_tokens > max_len``).
+            ValueError: If ``max_new_tokens`` is negative, ``sync_every``
+                is not positive, or the request does not fit the KV cache
+                budget (``prompt_len + cache_offset + max_new_tokens >
+                max_len``).
         """
         tokens = batch["tokens"]
         b, s = tokens.shape
@@ -161,6 +170,8 @@ class ServeEngine:
         if max_new_tokens < 0:
             raise ValueError(
                 f"generate: max_new_tokens must be >= 0, got {max_new_tokens}")
+        sync_every = guards.validate_positive(sync_every, name="sync_every",
+                                              op="generate")
         if s + off + max_new_tokens > self.max_len:
             raise ValueError(
                 f"generate: prompt ({s} tokens) + cache offset ({off}) + "
@@ -172,18 +183,30 @@ class ServeEngine:
             return jnp.zeros((b, 0), jnp.int32)
         key, k0 = jax.random.split(key)
         tok, caches = self._prefill(self.params, batch, k0)
-        done = np.asarray(tok) == eos_id if eos_id is not None else None
+        # the done mask lives on device; only jnp.all(done) crosses to the
+        # host, and only once per sync_every-token scheduler tick
+        done = (tok == eos_id) if eos_id is not None else None
         out = [tok]
         pos = s + off
         for i in range(max_new_tokens - 1):
-            if done is not None and bool(done.all()):
+            if (done is not None and i % sync_every == 0
+                    and bool(jax.device_get(jnp.all(done)))):
                 break  # every row emitted eos_id — stop early
             key, k = jax.random.split(key)
             tok, caches = self._decode(self.params, caches, tok,
                                        jnp.asarray(pos + i, jnp.int32), k)
             if done is not None:
-                tok = jnp.where(jnp.asarray(done),
-                                jnp.asarray(eos_id, tok.dtype), tok)
-                done = done | (np.asarray(tok) == eos_id)
+                tok = jnp.where(done, jnp.asarray(eos_id, tok.dtype), tok)
+                done = done | (tok == eos_id)
             out.append(tok)
-        return jnp.stack(out, axis=1)
+        res = jnp.stack(out, axis=1)
+        if done is not None and res.shape[1] > 1:
+            # trim columns decoded past the point where every row had
+            # finished — reproduces per-token early exit bit-identically
+            # whatever the tick size
+            col_done = np.logical_or.accumulate(
+                np.asarray(res == eos_id), axis=1).all(axis=0)
+            hits = np.nonzero(col_done)[0]
+            if hits.size:
+                res = res[:, :int(hits[0]) + 1]
+        return res

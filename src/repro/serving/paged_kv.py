@@ -1,0 +1,218 @@
+"""Paged KV cache for continuous batching (tentpole of the serving subsystem).
+
+The dense serving path allocates every row a rectangular ``(max_len, K, D)``
+cache whether the request uses it or not.  Here the time axis is broken into
+fixed ``page_size`` blocks drawn from a shared physical pool:
+
+  * per layer, one ``(n_pages, page_size, K, D)`` pool for k and one for v;
+  * per row, a ``(n_blocks,)`` int32 **page table** mapping logical block
+    ``t // page_size`` to a pool page (the ``SegmentedBatch`` CSR offsets of
+    PR 4, specialised to fixed-size segments);
+  * a free-list allocator that picks the lowest free page ids with the
+    paper's ``compress`` operator over the free mask — allocation is itself
+    a §5 scan.
+
+Page id 0 is **reserved scratch**: it is never handed out, unassigned page-
+table entries point at it, and idle rows of the decode batch write their
+(discarded) k/v there without clobbering live pages.
+
+The paged layout is a *layout*, not a different attention: gathering a row's
+pages back along time reproduces the dense ``(B, T, K, D)`` view, so for
+equal attention length T paged and dense decode are bitwise identical
+(dispatch-contract rule 11; ``gather_dense`` + the parity tests pin it).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import guards
+from repro.core.primitives import compress
+
+
+def pages_needed(tokens: int, page_size: int) -> int:
+    """Number of ``page_size`` blocks covering ``tokens`` positions."""
+    return -(-tokens // page_size)
+
+
+def _is_kv(node) -> bool:
+    return isinstance(node, dict) and set(node) == {"k", "v"}
+
+
+def _is_paged(node) -> bool:
+    return isinstance(node, dict) and set(node) == {"k", "v", "pages"}
+
+
+class PageAllocator:
+    """Host-side free list over the physical page pool.
+
+    The free mask lives on the host (allocation is control-plane work between
+    scheduler ticks), but page selection runs the paper's ``compress``: pack
+    the free page ids left and take the first ``n`` — lowest-id-first, so
+    replays are deterministic and pool usage is dense.
+    """
+
+    def __init__(self, n_pages: int, *, method: str = "auto"):
+        n_pages = guards.validate_positive(n_pages, name="n_pages",
+                                           op="PageAllocator")
+        if n_pages < 2:
+            raise ValueError("PageAllocator: n_pages must be >= 2 (page 0 is "
+                             "the reserved scratch page)")
+        self.n_pages = n_pages
+        self.method = method
+        self.free = np.ones(n_pages, dtype=bool)
+        self.free[0] = False                      # reserved scratch page
+        self.peak_in_use = 0
+
+    @property
+    def capacity(self) -> int:
+        """Allocatable pages (excludes the reserved scratch page)."""
+        return self.n_pages - 1
+
+    @property
+    def in_use(self) -> int:
+        return self.capacity - int(self.free.sum())
+
+    def alloc(self, n: int) -> Optional[np.ndarray]:
+        """Take the ``n`` lowest free page ids, or None if they don't fit."""
+        n = guards.validate_positive(n, name="n", op="PageAllocator.alloc")
+        ids, count = compress(jnp.arange(self.n_pages, dtype=jnp.int32),
+                              jnp.asarray(self.free), method=self.method)
+        if int(count) < n:
+            return None
+        taken = np.asarray(ids)[:n].copy()
+        self.free[taken] = False
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return taken
+
+    def release(self, ids) -> None:
+        ids = np.asarray(ids, dtype=np.int64)
+        if ids.size == 0:
+            return
+        if np.any(ids <= 0) or np.any(ids >= self.n_pages):
+            raise ValueError(f"PageAllocator.release: page ids {ids.tolist()} "
+                             f"outside the allocatable range "
+                             f"[1, {self.n_pages})")
+        if np.any(self.free[ids]):
+            raise ValueError("PageAllocator.release: double free of pages "
+                             f"{ids[self.free[ids]].tolist()}")
+        self.free[ids] = True
+
+
+def build_paged_caches(model, batch_size: int, n_pages: int, page_size: int,
+                       n_blocks: int):
+    """Paged decode caches matching ``model``'s dense cache structure.
+
+    Every dense ``{"k", "v"}`` attention leaf of shape
+    ``(*lead, B, clen, K, D)`` becomes ``{"k"/"v": (*lead, n_pages,
+    page_size, K, D), "pages": (*lead, B, n_blocks)}`` — the page table is
+    duplicated per layer so the whole cache flows through the layer-stack
+    ``lax.scan`` unchanged.  Raises for models whose caches are not pure
+    attention k/v (MLA latents, SSM/xLSTM states, cross-attention): the paged
+    layout is defined for the attention time axis only.
+    """
+    tmpl = jax.eval_shape(lambda: model.empty_caches(batch_size, page_size))
+
+    def walk(node, path):
+        if _is_kv(node):
+            k = node["k"]
+            *lead, b, _, kh, hd = k.shape
+            return {
+                "k": jnp.zeros((*lead, n_pages, page_size, kh, hd), k.dtype),
+                "v": jnp.zeros((*lead, n_pages, page_size, kh, hd),
+                               node["v"].dtype),
+                "pages": jnp.zeros((*lead, b, n_blocks), jnp.int32),
+            }
+        if isinstance(node, dict):
+            return {key: walk(val, f"{path}/{key}") for key, val in
+                    node.items()}
+        raise ValueError(
+            f"build_paged_caches: cache leaf at {path!r} is not an "
+            "attention {k, v} pair — the paged KV layout supports "
+            "attention-only decoders (dense/local/global/moe stacks)")
+
+    return walk(tmpl, "caches")
+
+
+def with_page_table(caches, row: int, page_ids) -> dict:
+    """Functionally set row ``row``'s page table across every layer.
+
+    ``page_ids``: 1-D int array of allocated pages for the row's leading
+    blocks; trailing table entries reset to the scratch page 0.
+    """
+    page_ids = np.asarray(page_ids, dtype=np.int32)
+
+    def walk(node):
+        if _is_paged(node):
+            nblk = node["pages"].shape[-1]
+            table = np.zeros(nblk, np.int32)
+            table[:page_ids.size] = page_ids
+            return {**node,
+                    "pages": node["pages"].at[..., row, :].set(
+                        jnp.asarray(table))}
+        return {key: walk(val) for key, val in node.items()}
+
+    return walk(caches)
+
+
+def clear_page_table(caches, row: int) -> dict:
+    """Reset row ``row``'s page table to the scratch page (eviction)."""
+    return with_page_table(caches, row, np.zeros(0, np.int32))
+
+
+def insert_request(caches, dense_caches, row: int, page_ids) -> dict:
+    """Scatter a request's dense prefill cache into its allocated pages.
+
+    ``dense_caches``: the model's dense caches for the request alone
+    (batch 1) with ``cache_len == len(page_ids) * page_size``; leaf shapes
+    ``(*lead, 1, m*page_size, K, D)``.  Also installs the row's page table.
+    """
+    page_ids = np.asarray(page_ids, dtype=np.int32)
+    ids = jnp.asarray(page_ids)
+
+    def walk(pn, dn):
+        if _is_paged(pn):
+            ps = pn["k"].shape[-3]
+            out = {"pages": pn["pages"]}
+            for name in ("k", "v"):
+                leaf = dn[name]
+                *lead, _, t, kh, hd = leaf.shape
+                if t != page_ids.size * ps:
+                    raise ValueError(
+                        f"insert_request: dense cache length {t} != "
+                        f"{page_ids.size} pages x page_size {ps}")
+                blocks = leaf.reshape(*lead, page_ids.size, ps, kh, hd)
+                out[name] = pn[name].at[..., ids, :, :, :].set(
+                    blocks.astype(pn[name].dtype))
+            return out
+        return {key: walk(pn[key], dn[key]) for key in pn}
+
+    return with_page_table(walk(caches, dense_caches), row, page_ids)
+
+
+def gather_dense(caches) -> dict:
+    """Materialise the dense ``(B, n_blocks*page_size, K, D)`` view.
+
+    Debug/parity helper: the gathered view is exactly what
+    ``attn_decode_paged`` attends over, so comparing it against a dense-path
+    cache is the rule-11 layout-parity check.
+    """
+
+    def gather(pool, pages):
+        lead = pages.shape[:-2]
+        pl = pool.reshape((-1,) + pool.shape[len(lead):])
+        pg = pages.reshape((-1,) + pages.shape[len(lead):])
+        out = jax.vmap(lambda p, t: p[t])(pl, pg)   # (lead*, B, nblk, ps, K, D)
+        b, nblk, ps = out.shape[1], out.shape[2], out.shape[3]
+        return out.reshape(lead + (b, nblk * ps) + out.shape[4:])
+
+    def walk(node):
+        if _is_paged(node):
+            return {"k": gather(node["k"], node["pages"]),
+                    "v": gather(node["v"], node["pages"])}
+        return {key: walk(val) for key, val in node.items()}
+
+    return walk(caches)

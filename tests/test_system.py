@@ -126,6 +126,45 @@ def test_generate_eos_early_exit():
         assert np.all(out[r, stop:] == eos) or hits.size == 0
 
 
+def test_generate_eos_sync_every_bit_identical():
+    """The device-side done mask syncs once per tick; any tick size must
+    reproduce the per-token early exit byte for byte (with and without eos)."""
+    eng = _tiny_engine()
+    batch = {"tokens": jnp.ones((2, 4), jnp.int32)}
+    key = jax.random.PRNGKey(0)
+    full = np.asarray(eng.generate(batch, 6, key))
+    eos = int(full[0, 2])
+    ref = np.asarray(eng.generate(batch, 6, key, eos_id=eos, sync_every=1))
+    for se in (2, 3, 8, 100):
+        np.testing.assert_array_equal(
+            np.asarray(eng.generate(batch, 6, key, eos_id=eos,
+                                    sync_every=se)), ref)
+    # no eos: sync_every must be a no-op on the stream
+    np.testing.assert_array_equal(
+        np.asarray(eng.generate(batch, 6, key, sync_every=2)), full)
+    import pytest
+    with pytest.raises(ValueError, match="sync_every"):
+        eng.generate(batch, 2, key, eos_id=eos, sync_every=0)
+
+
+def test_prefill_rejects_zero_or_short_cache_len():
+    """cache_len=0 used to fall through `cache_len or s` onto s silently."""
+    import pytest
+    from repro.models.model import build_model
+
+    for name in ("llama3-8b", "minicpm3-4b"):   # attn_full and mla_full sites
+        cfg = get_config(name, smoke=True)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = {"tokens": jnp.ones((1, 8), jnp.int32)}
+        with pytest.raises(ValueError, match="cache_len"):
+            model.prefill(params, batch, cache_len=0)
+        with pytest.raises(ValueError, match="shorter than the"):
+            model.prefill(params, batch, cache_len=4)
+        logits, _ = model.prefill(params, batch, cache_len=8)
+        assert logits.shape[0] == 1
+
+
 def test_serve_engine_validates_sampler_params():
     import pytest
 

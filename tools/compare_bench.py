@@ -7,10 +7,13 @@ gate regressions instead of only being uploaded as an artifact:
 * **structure** — every baseline file must have a fresh counterpart, and every
   baseline row name must appear in the fresh file (a vanished section or row
   fails the job; *new* rows/files are reported but allowed — the suite grows).
-* **exact derived metrics** — integer model quantities embedded in the
-  ``derived`` column (``passes``, ``expected``, ``bits``, ``bytes_moved``,
-  ``n``, ``scans_per_batch``) must match exactly: they encode algorithmic
-  facts (launch counts, traffic models), not timings.  A gated key that is
+* **exact derived metrics** — machine-independent model quantities embedded
+  in the ``derived`` column (``passes``, ``expected``, ``bits``,
+  ``bytes_moved``, ``n``, ``scans_per_batch``, and the serve section's
+  schedule-derived ``tokens``/``reqs``/``steps``/``peak_pages``/
+  ``p50_steps``/``p99_steps``/``while_loops``) must match exactly: they
+  encode algorithmic facts (launch counts, traffic models, deterministic
+  schedules), not timings.  A gated key that is
   present in the baseline row but *missing* from the fresh row is a hard
   failure too — otherwise a benchmark edit that drops a derived column (say
   ``max_ulp``) silently un-gates it.
@@ -55,7 +58,13 @@ import statistics
 import sys
 
 EXACT_KEYS = ("passes", "expected", "bits", "bytes_moved", "n",
-              "scans_per_batch")
+              "scans_per_batch",
+              # serve section: schedule-derived quantities (token counts,
+              # virtual-step latencies, page-pool peaks, while-loop launch
+              # counts) are pure functions of the seeded arrival trace —
+              # machine-independent, so gated exactly
+              "tokens", "reqs", "steps", "peak_pages", "p50_steps",
+              "p99_steps", "while_loops")
 # accuracy floats: gated within a factor + slack of baseline, and against the
 # row's own documented ulp_bound when present (see module docstring)
 BOUNDED_KEYS = ("max_ulp",)
