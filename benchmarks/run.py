@@ -37,6 +37,10 @@ the TPU-side projection lives in EXPERIMENTS.md §Roofline).
                  tokens/s + p50/p99 per-token step latency + page-pool
                  utilization, plus a trace-only guard that decode_n stages
                  exactly one while_loop -> BENCH_serve.json
+  dist           distributed operator family at 8 virtual devices:
+                 measured (HLO-parsed) vs modeled (closed-form) collective
+                 traffic per dist_* op, gated exactly in-run
+                 -> BENCH_dist.json                                [8 devices]
 """
 from __future__ import annotations
 
@@ -685,6 +689,105 @@ def serve_sweep(smoke=False):
             f"continuous_speedup={dt_d / dt:.2f}x")
 
 
+_DIST_SUB = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, time
+import numpy as np, jax, jax.numpy as jnp
+sys.path.insert(0, {src!r})
+from repro.analysis.roofline import summarize_collectives
+from repro.core import (dist_linear_scan, dist_radix_sort, dist_segment_scan,
+                        dist_top_p_sample)
+from repro.utils.compat import make_mesh
+rng = np.random.default_rng(0)
+for op, d, n, bpp in {specs!r}:
+    mesh = make_mesh((d,), ("data",))
+    if op == "dist_sort":
+        x = jnp.asarray(rng.normal(size=(2, n)), jnp.bfloat16)
+        fn, args = (lambda v: dist_radix_sort(
+            v, mesh, "data", method="matmul", tile_s=32,
+            bits_per_pass=bpp)), (x,)
+        dt = "bfloat16"
+    elif op == "dist_top_p_sample":
+        lg = jnp.asarray(rng.normal(size=(2, n)) * 3, jnp.float32)
+        fn, args = (lambda v, k: dist_top_p_sample(
+            v, k, mesh, "data", p=0.9, method="matmul", tile_s=32,
+            bits_per_pass=bpp)), (lg, jax.random.PRNGKey(0))
+        dt = "float32"
+    elif op == "dist_linear_scan":
+        a = jnp.asarray(rng.uniform(0.8, 1.2, size=(2, n)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(2, n)), jnp.float32)
+        fn, args = (lambda u, v: dist_linear_scan(
+            u, v, mesh, "data", method="matmul", tile_s=32)), (a, b)
+        dt = "float32"
+    else:
+        xs = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+        off = jnp.asarray([0, n // 3, n], jnp.int32)
+        fn, args = (lambda v, o: dist_segment_scan(
+            v, o, mesh, "data", method="matmul", tile_s=32)), (xs, off)
+        dt = "float32"
+    compiled = jax.jit(fn).lower(*args).compile()
+    meas = summarize_collectives(compiled.as_text())
+    jax.block_until_ready(compiled(*args))
+    ts = []
+    for _ in range(3):
+        t0 = time.perf_counter(); jax.block_until_ready(compiled(*args))
+        ts.append(time.perf_counter() - t0)
+    print(f"DIST,{{op}},{{dt}},{{d}},{{n}},{{bpp}},{{float(np.median(ts))}},"
+          f"{{meas['collective_count']}},{{meas['operand_bytes']}}")
+"""
+
+
+def dist_sweep(smoke=False):
+    """Distributed operator family: measured-vs-modeled traffic -> BENCH_dist.json.
+
+    Every ``dist_*`` operator is lowered at 8 (and, non-smoke, 2) virtual
+    host devices; the post-SPMD HLO is parsed for collectives
+    (:func:`repro.analysis.roofline.summarize_collectives`) and compared —
+    in-run, aborting on mismatch — against the closed forms of
+    :func:`repro.analysis.collectives.modeled_dist_traffic`
+    (docs/distributed.md §Traffic).  Collective counts and operand bytes are
+    both shape-derived, so the gate is **exact**: the committed
+    ``bytes_measured`` must equal ``bytes_modeled`` on every row, and
+    ``tools/compare_bench.py`` re-gates all three derived columns against the
+    committed baseline.  Timings ride along informationally (CPU backend).
+    """
+    from repro.analysis.collectives import modeled_dist_traffic
+    n = 256 if smoke else 2048
+    specs = [("dist_sort", 8, n, 8), ("dist_top_p_sample", 8, n, 8),
+             ("dist_linear_scan", 8, n, 8), ("dist_segment_scan", 8, n, 8)]
+    if not smoke:
+        specs += [("dist_sort", 2, n, 4), ("dist_linear_scan", 2, n, 4)]
+    code = _DIST_SUB.format(src=os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")), specs=specs)
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env, timeout=1800)
+    if r.returncode != 0:
+        raise SystemExit(f"dist sweep subprocess failed:\n{r.stderr[-2000:]}")
+    for line in r.stdout.splitlines():
+        parts = line.strip().split(",")
+        if parts[0] != "DIST":
+            continue
+        op, dt, d, nn, bpp, t, mc, mb = parts[1], parts[2], int(parts[3]), \
+            int(parts[4]), int(parts[5]), float(parts[6]), int(parts[7]), \
+            float(parts[8])
+        mod = modeled_dist_traffic(op, d=d, n=nn, batch=1 if op ==
+                                   "dist_segment_scan" else 2, dtype=dt,
+                                   bits_per_pass=bpp)
+        row(f"dist/{op}/matmul/{dt}/d={d}/n={nn}", t,
+            f"collective_count={mc};bytes_measured={mb:.0f};"
+            f"bytes_modeled={mod['operand_bytes']:.0f}")
+        if mc != mod["collective_count"] or mb != mod["operand_bytes"]:
+            raise SystemExit(
+                f"dist traffic guard: {op} d={d} n={nn} measured "
+                f"{mc} collectives / {mb:.0f} operand bytes, model says "
+                f"{mod['collective_count']} / {mod['operand_bytes']:.0f} — "
+                "the lowered HLO no longer matches docs/distributed.md "
+                "§Traffic")
+
+
 def guards_identity_guard():
     """Assert guards-off traces are byte-identical to ``guards_disabled``.
 
@@ -757,14 +860,16 @@ def main() -> None:
         "precision": lambda: precision_sweep(smoke=args.smoke),
         "ops": lambda: ops_operators(smoke=args.smoke),
         "serve": lambda: serve_sweep(smoke=args.smoke),
+        "dist": lambda: dist_sweep(smoke=args.smoke),
         "guards": guards_identity_guard,
     }
     only = set(args.only.split(",")) if args.only else None
     if args.smoke and only is None:
-        # fast, single-process sections (sort carries the pass-count guard,
-        # serve the while-loop launch guard, guards the jaxpr-identity guard)
+        # fast sections (sort carries the pass-count guard, serve the
+        # while-loop launch guard, guards the jaxpr-identity guard, dist —
+        # the one subprocess section — the measured-vs-modeled traffic guard)
         only = {"fig3", "fig10", "fig11", "scan_pipeline", "sort", "segscan",
-                "linrec", "precision", "ops", "serve", "guards"}
+                "linrec", "precision", "ops", "serve", "dist", "guards"}
     print("name,us_per_call,derived")
     for name, fn in sections.items():
         if only and name not in only:

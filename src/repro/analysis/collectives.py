@@ -1,20 +1,129 @@
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
-"""Per-op collective attribution for one dry-run cell: top collective ops grouped by
-(kind, shape), with counts and wire bytes — the profile used by §Perf hillclimbs.
+"""Collective-traffic accounting: measured (HLO-parsed) vs modeled (closed form).
 
-  PYTHONPATH=src python -m repro.analysis.collectives --arch gemma2-2b \
-      --shape train_4k [--mesh single]
+Two consumers:
+
+* **CLI** — per-op collective attribution for one dry-run cell: top collective
+  ops grouped by (kind, shape), with counts and wire bytes — the profile used
+  by §Perf hillclimbs.
+
+      PYTHONPATH=src python -m repro.analysis.collectives --arch gemma2-2b \
+          --shape train_4k [--mesh single]
+
+* **Library** — the measured-vs-modeled traffic contract of the distributed
+  operator family (``repro.core.dist_ops``): :func:`measure_collectives`
+  compiles a callable and summarizes its HLO collectives;
+  :func:`modeled_dist_traffic` produces the per-op closed forms derived in
+  ``docs/distributed.md``.  ``benchmarks/run.py dist`` gates one against the
+  other and commits both as ``bytes_measured`` / ``bytes_modeled`` columns in
+  ``BENCH_dist.json``.
 """
 import argparse
 import collections
+import math
+from typing import Dict
 
-from repro.analysis.roofline import _OP_RE, parse_collectives
-from repro.launch.dryrun import lower_cell
-from repro.launch.mesh import make_debug_mesh, make_production_mesh
+_SORT_BITS = {"float32": 32, "bfloat16": 16, "float16": 16, "int32": 32,
+              "int16": 16, "uint32": 32, "uint16": 16, "int8": 8, "uint8": 8}
+
+
+def measure_collectives(fn, *args) -> Dict:
+    """Compile ``fn(*args)`` and summarize its HLO collectives.
+
+    Thin wrapper: ``jit`` -> ``lower`` -> ``compile`` -> parse the post-SPMD
+    module text with :func:`repro.analysis.roofline.summarize_collectives`.
+    Shapes only — nothing is executed, so this is safe on hosts without the
+    target device count as long as the mesh itself can be built.
+    """
+    import jax
+    from repro.analysis.roofline import summarize_collectives
+    compiled = jax.jit(fn).lower(*args).compile()
+    return summarize_collectives(compiled.as_text())
+
+
+def _radix_schedule(bits: int, bits_per_pass: int):
+    """Per-pass radix sizes ``2^k`` (a ragged final digit uses fewer bits)."""
+    return [1 << min(bits_per_pass, bits - s)
+            for s in range(0, bits, bits_per_pass)]
+
+
+def modeled_dist_traffic(op: str, *, d: int, n: int, batch: int = 1,
+                         dtype: str = "float32", bits_per_pass: int = 4,
+                         itemsize: int = 4) -> Dict:
+    """Closed-form per-chip collective traffic of a ``dist_*`` operator.
+
+    The 2N + B-style forms of ``docs/distributed.md`` §Traffic, written
+    against the same operand-bytes convention as
+    :func:`~repro.analysis.roofline.parse_collectives` so the result compares
+    *exactly* against :func:`measure_collectives` on the lowered op:
+
+    * ``dist_sort``: per pass, one histogram ``all_gather`` (``4·D·batch·R``
+      bytes — the B-term) and one dense bucket-exchange ``all_to_all``
+      (``4·batch·D·C·n_local`` bytes, ``C = 2`` uint32 channels).
+    * ``dist_top_p_sample``: the sort with ``C = 3`` channels over the 16
+      bf16 key bits, plus two softmax all-reduces, two
+      ``mcscan_local`` block-sum gathers, the shard-threshold gather, and
+      two sampling all-reduces — every extra term is B-sized.
+    * ``dist_linear_scan`` / ``dist_segment_scan``: a single ``all_gather``
+      of the ``(A, B)`` affine carry pairs — ``2·itemsize·D·batch`` bytes
+      total; the 2N term stays local to each shard.
+
+    Args:
+        op: ``"dist_sort"``, ``"dist_top_p_sample"``, ``"dist_linear_scan"``
+            or ``"dist_segment_scan"``.
+        d: Shard count ``D`` (mesh axis size).
+        n: Global length of the sharded axis (pre-padding).
+        batch: Product of the leading (batch) dims.
+        dtype: Key dtype name for the sort pass count.
+        bits_per_pass: Bits retired per radix pass.
+        itemsize: Accumulation-dtype bytes for the carry pair (linrec /
+            segmented).
+
+    Returns:
+        ``{"collective_count", "operand_bytes", "counts_by_kind"}`` —
+        directly comparable with :func:`measure_collectives`' summary.
+    """
+    n_local = math.ceil(n / d)
+    if op == "dist_sort":
+        radixes = _radix_schedule(_SORT_BITS[dtype], bits_per_pass)
+        ag = sum(4 * d * batch * r for r in radixes)
+        a2a = len(radixes) * 4 * batch * d * 2 * n_local
+        return {
+            "collective_count": 2 * len(radixes),
+            "operand_bytes": float(ag + a2a),
+            "counts_by_kind": {"all-gather": len(radixes),
+                               "all-to-all": len(radixes)},
+        }
+    if op == "dist_top_p_sample":
+        radixes = _radix_schedule(16, bits_per_pass)       # bf16 keys
+        ag_hist = sum(4 * d * batch * r for r in radixes)
+        a2a = len(radixes) * 4 * batch * d * 3 * n_local   # key+token+prob
+        ag_scan = 2 * 4 * d * batch                        # two mcscan gathers
+        ag_tail = 4 * d * batch                            # shard thresholds
+        ar = 4 * 4 * batch                                 # pmax+denom+rank+tok
+        return {
+            "collective_count": 2 * len(radixes) + 3 + 4,
+            "operand_bytes": float(ag_hist + a2a + ag_scan + ag_tail + ar),
+            "counts_by_kind": {"all-gather": len(radixes) + 3,
+                               "all-to-all": len(radixes),
+                               "all-reduce": 4},
+        }
+    if op in ("dist_linear_scan", "dist_segment_scan"):
+        return {
+            "collective_count": 1,
+            "operand_bytes": float(2 * itemsize * d * batch),
+            "counts_by_kind": {"all-gather": 1},
+        }
+    raise ValueError(f"modeled_dist_traffic: unknown op {op!r}")
 
 
 def main():
+    """CLI entry point (see module docstring)."""
+    from repro.analysis.roofline import _OP_RE, parse_collectives
+    from repro.launch.dryrun import lower_cell
+    from repro.launch.mesh import make_debug_mesh, make_production_mesh
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", required=True)

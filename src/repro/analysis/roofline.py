@@ -94,6 +94,31 @@ def parse_collectives(hlo_text: str) -> List[Dict]:
     return out
 
 
+def summarize_collectives(hlo_text: str) -> Dict:
+    """Aggregate :func:`parse_collectives` into the bench-gated summary.
+
+    Returns ``{"collective_count", "operand_bytes", "wire_bytes",
+    "counts_by_kind", "bytes_by_kind"}`` — per-chip totals over every
+    collective in the (post-SPMD) HLO text.  ``operand_bytes`` is the sum of
+    each collective's operand size, the quantity the distributed-op traffic
+    closed forms (``repro.analysis.collectives.modeled_dist_traffic``) model
+    and ``benchmarks/run.py dist`` gates as ``bytes_measured``.
+    """
+    colls = parse_collectives(hlo_text)
+    counts: Dict[str, int] = {}
+    bby: Dict[str, float] = {}
+    for c in colls:
+        counts[c["kind"]] = counts.get(c["kind"], 0) + 1
+        bby[c["kind"]] = bby.get(c["kind"], 0.0) + c["operand_bytes"]
+    return {
+        "collective_count": len(colls),
+        "operand_bytes": float(sum(c["operand_bytes"] for c in colls)),
+        "wire_bytes": float(sum(c["wire_bytes"] for c in colls)),
+        "counts_by_kind": counts,
+        "bytes_by_kind": bby,
+    }
+
+
 @dataclasses.dataclass
 class Roofline:
     flops: float

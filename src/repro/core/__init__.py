@@ -15,6 +15,10 @@ from repro.core.scan import (
     strictly_lower_ones, accum_dtype_for,
 )
 from repro.core.distributed import mcscan, mcscan_local
+from repro.core.dist_ops import (
+    dist_linear_scan, dist_radix_sort, dist_segment_scan, dist_sort,
+    dist_top_p_sample, dist_topk,
+)
 from repro.core.linrec import linear_scan, cumprod, cummax, linrec_accum_dtype_for
 from repro.core.primitives import (
     split, multi_split, compress, radix_sort, sort, topk, top_p_sample,

@@ -1,0 +1,804 @@
+"""Distributed operator family — paper §4's two-level algorithm for every op.
+
+`repro.core.distributed` applies the paper's multi-core MCScan (Alg. 3) to
+prefix sums: per-device partial results + one small collective carrying the
+per-block summaries + a local fix-up.  This module generalizes that *same*
+three-phase structure to the rest of the operator family, so the whole stack
+(sort, top-k, nucleus sampling, linear recurrences, segmented scans) runs with
+the scanned/sorted axis sharded over a mesh axis:
+
+* **distributed radix sort** (:func:`dist_radix_sort`): each pass runs the
+  per-shard radix-2^k multi-way split locally (phase 1), ``all_gather`` s the
+  tiny per-shard bucket histograms and turns them into global bucket bases via
+  an exclusive scan — the paper's phase-2 carry scan generalized to per-shard
+  bases — then routes every element to its globally sorted slot with exactly
+  **one** ``all_to_all`` bucket exchange per pass (phase 3).
+* **sharded-vocab top-p sampling** (:func:`dist_top_p_sample`): softmax over
+  the model-parallel vocab shard (``pmax``/``psum``), the distributed sort
+  above on bf16 keys, per-shard sorted prefix mass via
+  :func:`~repro.core.distributed.mcscan_local`, and a B-sized ``all_gather``
+  of shard thresholds + ``psum`` rank count for the inverse-transform sample.
+* **multi-device linear recurrence** (:func:`dist_linear_scan`): each shard is
+  an affine map ``x -> A·x + B``; the ``(A, B)`` pairs travel in one small
+  ``all_gather`` (phase 2) and fold into per-shard carries.
+* **multi-device segmented scan** (:func:`dist_segment_scan`): the carry pair
+  is (trailing segment sum, has-internal-boundary); the boundary flag zeroes
+  the affine slope so carries stop at the first boundary of each shard.
+
+Parity contract: every operator here is **bit-identical** to its single-device
+sibling in :mod:`repro.core.primitives` / :mod:`~repro.core.linrec` /
+:mod:`~repro.core.segmented` applied to the gathered input — for every
+``method`` — except the floating-point sampling path of
+:func:`dist_top_p_sample`, where the sharded softmax/prefix-mass reductions
+associate differently and parity is documented-ulp (see
+``docs/distributed.md``).  On a 1-device mesh every entry point short-circuits
+to its local sibling, so the contract is trivially exact there.
+
+Traffic contract: per-op closed forms for the collective bytes are derived in
+``docs/distributed.md`` and checked against the HLO-lowered collectives
+(``repro.analysis.roofline.parse_collectives``) by ``benchmarks/run.py dist``.
+
+Doctests run on up to two host devices
+(``XLA_FLAGS=--xla_force_host_platform_device_count=2``); by the parity
+contract their outputs are identical on a 1-device mesh.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import guards
+from repro.core.autotune import maybe_resolve
+from repro.core.distributed import mcscan_local
+from repro.core.linrec import cumprod, linear_scan, linrec_accum_dtype_for
+from repro.core.primitives import (
+    _encode_for_sort,
+    _multi_split_dest,
+    _reject_poisoned_logits,
+    _scatter_payloads,
+    _take_along_last,
+    radix_sort,
+    top_p_sample,
+)
+from repro.core.segmented import segment_scan
+from repro.utils.compat import axis_size, shard_map, shard_map_unchecked
+
+__all__ = [
+    "dist_radix_sort", "dist_sort", "dist_topk", "dist_top_p_sample",
+    "dist_linear_scan", "dist_segment_scan",
+]
+
+
+# ---------------------------------------------------------------------------
+# shared shard_map plumbing
+# ---------------------------------------------------------------------------
+
+
+def _mesh_axis_size(mesh: Mesh, axis_name: str, *, op: str) -> int:
+    """Validate that ``mesh`` has ``axis_name`` and return its size."""
+    if not isinstance(mesh, Mesh):
+        raise TypeError(f"{op}: mesh must be a jax.sharding.Mesh, got "
+                        f"{type(mesh).__name__}")
+    if axis_name not in mesh.shape:
+        raise ValueError(f"{op}: mesh has no axis {axis_name!r}; available "
+                         f"axes: {tuple(mesh.shape)}")
+    return mesh.shape[axis_name]
+
+
+def _sharded_spec(ndim: int, axis_name: str) -> P:
+    """Last-axis-sharded ``PartitionSpec`` for an ``ndim``-dim array."""
+    return P(*([None] * (ndim - 1) + [axis_name]))
+
+
+def _shard_mapper(method: str):
+    """Checked ``shard_map`` for pure-XLA methods, unchecked for Pallas ones.
+
+    ``pallas_call`` has no replication rule, so the Pallas-launching methods
+    (``kernel``/``blocked``) need the replication check disabled — the same
+    rule :func:`repro.core.distributed.mcscan` applies.
+    """
+    return shard_map_unchecked if method in ("kernel", "blocked") else shard_map
+
+
+def _pad_last(x: jax.Array, multiple: int, fill) -> Tuple[jax.Array, int]:
+    """Pad the last axis of ``x`` up to a multiple; returns ``(padded, pad)``."""
+    n = x.shape[-1]
+    pad = (-n) % multiple
+    if pad:
+        fill_arr = jnp.full(x.shape[:-1] + (pad,), fill, x.dtype)
+        x = jnp.concatenate([x, fill_arr], axis=-1)
+    return x, pad
+
+
+# ---------------------------------------------------------------------------
+# the bucket exchange (phase 3 of the distributed radix pass)
+# ---------------------------------------------------------------------------
+
+
+def _exchange(channels: Sequence[jax.Array], gdest: jax.Array,
+              axis_name: str) -> Tuple[jax.Array, ...]:
+    """Route payload channels to their global slots with one ``all_to_all``.
+
+    Every locally bucket-grouped element carries a unique global destination
+    ``gdest`` in ``[0, D * n_local)``; destination shard is ``gdest //
+    n_local`` and in-shard offset ``gdest % n_local``.  XLA's ``all_to_all``
+    is static-shape, so the routing is materialized as a dense per-destination
+    buffer ``(..., D, C, n_local)``: each source shard scatters its elements
+    into the slots they own and leaves the additive identity everywhere else.
+    Exactly one source shard populates any global slot, so after the exchange
+    a sum over the source axis acts as a select — no second collective and no
+    dynamic shapes.  The channels are bitcast to a common uint32 so ``C``
+    payloads ride a single ``all_to_all`` (the per-pass collective-count
+    contract: one ``all_gather`` + one ``all_to_all``).
+
+    Args:
+        channels: Arrays ``(..., n_local)`` of uint32/int32/float32 — 32-bit
+            dtypes only (keys are widened before the pass loop).
+        gdest: int32 global destination index per element, ``(..., n_local)``.
+        axis_name: Mesh axis the sorted dimension is sharded over.
+
+    Returns:
+        The rerouted channels, same shapes and dtypes, each shard holding
+        global slots ``[me * n_local, (me + 1) * n_local)``.
+    """
+    D = axis_size(axis_name)
+    n_local = gdest.shape[-1]
+    dtypes = [c.dtype for c in channels]
+    packed = [c if c.dtype == jnp.uint32
+              else jax.lax.bitcast_convert_type(c, jnp.uint32)
+              for c in channels]
+    C = len(packed)
+    stacked = jnp.stack(packed, axis=-2)             # (..., C, n_local)
+    shard = (gdest // n_local).astype(jnp.int32)
+    offset = (gdest % n_local).astype(jnp.int32)
+
+    def route_row(vals, s1, o1):
+        """Scatter one row's channels into its dense (D, C, n_local) buffer."""
+        ci = jnp.arange(C, dtype=jnp.int32)
+        buf = jnp.zeros((D, C, n_local), jnp.uint32)
+        return buf.at[s1[None, :], ci[:, None], o1[None, :]].set(vals)
+
+    batch = gdest.shape[:-1]
+    if batch:
+        buf = jax.vmap(route_row)(stacked.reshape(-1, C, n_local),
+                                  shard.reshape(-1, n_local),
+                                  offset.reshape(-1, n_local))
+        buf = buf.reshape(*batch, D, C, n_local)
+    else:
+        buf = route_row(stacked, shard, offset)
+    ax = buf.ndim - 3                                # the destination-shard axis
+    ex = jax.lax.all_to_all(buf, axis_name, split_axis=ax, concat_axis=ax)
+    merged = jnp.sum(ex, axis=ax)                    # select: one writer per slot
+    outs = []
+    for c in range(C):
+        v = merged[..., c, :]
+        outs.append(v if dtypes[c] == jnp.uint32
+                    else jax.lax.bitcast_convert_type(v, dtypes[c]))
+    return tuple(outs)
+
+
+def _global_dest(bucket: jax.Array, counts: jax.Array,
+                 axis_name: str) -> jax.Array:
+    """Global sorted slot of each locally bucket-grouped element.
+
+    The paper's phase-2 carry scan generalized to per-shard bases: one
+    ``all_gather`` of the tiny ``(..., R)`` per-shard histograms, an exclusive
+    scan of the global bucket totals for the bucket bases, and a mask-matvec
+    (exactly :func:`~repro.core.distributed.mcscan_local`'s ``before @ r``
+    trick) for this shard's offset within each bucket.
+
+    Args:
+        bucket: int32 bucket id per locally *grouped* element, ``(...,
+            n_local)`` — elements with the same id are contiguous.
+        counts: int32 local histogram ``(..., R)``.
+        axis_name: Mesh axis of the shards.
+
+    Returns:
+        int32 global destination index per element, ``(..., n_local)``;
+        globally a permutation of ``0 .. D * n_local - 1``.
+    """
+    D = axis_size(axis_name)
+    me = jax.lax.axis_index(axis_name)
+    c_all = jax.lax.all_gather(counts, axis_name)        # (D, ..., R)
+    totals = jnp.sum(c_all, axis=0)                      # (..., R) global counts
+    gbase = jnp.cumsum(totals, axis=-1) - totals         # global bucket bases
+    before = (jnp.arange(D) < me).astype(jnp.int32)
+    shard_off = jnp.tensordot(before, c_all, axes=(0, 0))  # earlier shards' share
+    lbase = jnp.cumsum(counts, axis=-1) - counts         # local grouped bases
+    iota = jnp.arange(bucket.shape[-1], dtype=jnp.int32)
+    rank = iota - _take_along_last(lbase, bucket)        # within-bucket rank
+    return _take_along_last(gbase + shard_off, bucket) + rank
+
+
+def _local_group(channels: Tuple[jax.Array, ...], digits: jax.Array, radix: int,
+                 *, shift: int, pass_bits: int, method: str, tile_s: int,
+                 interpret: Optional[bool]):
+    """Stable local radix-2^k grouping of the pass channels, with histogram.
+
+    ``method="kernel"`` runs the (keys, perm) channels through the fused
+    ``radix_pass_kernel`` with its per-shard histogram export (the
+    ``with_counts=True`` path added for this layer) and any extra payload
+    channel through ``multi_split_kernel``; the unfused methods share one
+    :func:`~repro.core.primitives._multi_split_dest` mask scan for all
+    channels, exactly like the single-device sort pass.
+
+    Returns:
+        ``(grouped_channels, counts)`` with ``counts`` int32 ``(..., R)``.
+    """
+    if method == "kernel":
+        from repro.kernels import ops as _kops
+        work, perm = channels[0], channels[1]
+        *lead, n = work.shape
+        w2 = work.reshape(-1, n)
+        p2 = perm.reshape(-1, n)
+        pad = (-n) % tile_s
+        if pad:
+            fill = jnp.full((w2.shape[0], pad), jnp.iinfo(work.dtype).max,
+                            work.dtype)
+            w2 = jnp.concatenate([w2, fill], axis=-1)
+            p2 = jnp.concatenate([p2, jnp.zeros((p2.shape[0], pad), p2.dtype)],
+                                 axis=-1)
+        wo, po, cnt = _kops.radix_pass_kernel(
+            w2, p2, shift=shift, pass_bits=pass_bits, s=tile_s,
+            interpret=interpret, with_counts=True)
+        # padding keys are all-ones, so they land in (and are removed from)
+        # the top bucket; grouped pads sit at the end and slice away
+        cnt = cnt.at[:, radix - 1].add(-pad)
+        grouped = [wo[:, :n].reshape(*lead, n), po[:, :n].reshape(*lead, n)]
+        for extra in channels[2:]:
+            e2 = extra.reshape(-1, n)
+            if pad:
+                e2 = jnp.concatenate(
+                    [e2, jnp.zeros((e2.shape[0], pad), e2.dtype)], axis=-1)
+            d2 = ((w2 >> shift) & jnp.asarray(radix - 1, w2.dtype)
+                  ).astype(jnp.int32)
+            z, _, _ = _kops.multi_split_kernel(e2, d2, num_buckets=radix,
+                                               s=tile_s, interpret=interpret)
+            grouped.append(z[:, :n].reshape(*lead, n))
+        return tuple(grouped), cnt.reshape(*lead, radix)
+    dest, counts = _multi_split_dest(digits, radix, method=method,
+                                     tile_s=tile_s)
+    grouped = _scatter_payloads(tuple(channels), dest, with_indices=False)
+    return grouped, counts
+
+
+def _dist_radix_passes(channels: Tuple[jax.Array, ...], bits: int,
+                       axis_name: str, *, method: str, tile_s: int,
+                       bits_per_pass: int, interpret: Optional[bool]):
+    """Run all distributed radix passes; ``channels[0]`` holds the work keys.
+
+    Per pass: local stable multi-way split (phase 1), histogram
+    ``all_gather`` + global bucket bases (phase 2), one ``all_to_all`` bucket
+    exchange (phase 3).  Keys must already be widened to uint32 (only the low
+    ``bits`` are inspected) and any descending complement applied.
+    """
+    for shift in range(0, bits, bits_per_pass):
+        k = min(bits_per_pass, bits - shift)
+        radix = 1 << k
+        work = channels[0]
+        mask = jnp.asarray(radix - 1, work.dtype)
+        digits = ((work >> shift) & mask).astype(jnp.int32)
+        grouped, counts = _local_group(channels, digits, radix, shift=shift,
+                                       pass_bits=k, method=method,
+                                       tile_s=tile_s, interpret=interpret)
+        bucket = ((grouped[0] >> shift) & mask).astype(jnp.int32)
+        gdest = _global_dest(bucket, counts, axis_name)
+        channels = _exchange(grouped, gdest, axis_name)
+    return channels
+
+
+# ---------------------------------------------------------------------------
+# distributed sort / top-k
+# ---------------------------------------------------------------------------
+
+
+def dist_radix_sort(x: jax.Array, mesh: Mesh, axis_name: str = "data", *,
+                    descending: bool = False, method: str = "auto",
+                    return_indices: bool = True, tile_s: int = 128,
+                    bits_per_pass: int = 4, interpret: Optional[bool] = None):
+    """Stable LSB radix sort with the keys sharded over a mesh axis.
+
+    The paper's scan-based radix sort (§5) lifted to the two-level §4
+    structure: each of the ``ceil(bits / bits_per_pass)`` passes runs the
+    per-shard multi-way split locally, ``all_gather`` s the ``(D, R)`` bucket
+    histograms, derives global bucket bases with an exclusive scan (the
+    phase-2 carry scan over per-shard bases), and redistributes (key, index)
+    pairs with exactly one ``all_to_all``.  Bit-identical to
+    :func:`repro.core.primitives.radix_sort` on the gathered input for every
+    ``method`` — bucket offsets are exact integer mask scans and the
+    shard-major exchange order preserves stability.
+
+    Args:
+        x: Global keys ``(..., n)`` (dtypes as in ``radix_sort``); ``n`` need
+            not divide the axis size — the tail is padded with the maximum
+            key internally and sliced off.
+        mesh: Device mesh; the last axis of ``x`` is sharded over it.
+        axis_name: Mesh axis to shard the sorted axis over.  A size-1 axis
+            short-circuits to the single-device sort (no collectives).
+        descending: Sort high-to-low (stability preserved by complementing
+            the encoded keys, exactly as in the local sort).
+        method: One of ``METHODS`` (``"auto"`` resolves on the per-shard
+            length) for the local mask scans.
+        return_indices: If false, return only the sorted values.
+        tile_s: Tile side ``s`` for the local mask scans.
+        bits_per_pass: Bits retired per radix pass (``1..8``).
+        interpret: Force Pallas interpret mode.
+
+    Returns:
+        ``(values, permutation)`` — or just ``values`` — as *global* arrays,
+        matching the single-device :func:`~repro.core.primitives.radix_sort`.
+
+    Example:
+        >>> import jax, jax.numpy as jnp
+        >>> from repro.utils.compat import make_mesh
+        >>> mesh = make_mesh((min(2, jax.device_count()),), ("data",))
+        >>> v, i = dist_radix_sort(jnp.asarray([3, -1, 2, -5], jnp.int8), mesh)
+        >>> v.tolist(), i.tolist()
+        ([-5, -1, 2, 3], [3, 1, 2, 0])
+    """
+    bits_per_pass = guards.validate_bits_per_pass(bits_per_pass,
+                                                  op="dist_radix_sort")
+    D = _mesh_axis_size(mesh, axis_name, op="dist_radix_sort")
+    if D == 1:
+        return radix_sort(x, descending=descending, method=method,
+                          return_indices=return_indices, tile_s=tile_s,
+                          bits_per_pass=bits_per_pass, interpret=interpret)
+    n = x.shape[-1]
+    enc, bits, decode = _encode_for_sort(x)
+    if descending:
+        enc = ~enc
+    work = enc.astype(jnp.uint32)
+    # pad to a D-divisible length with the maximum key: padding stays at the
+    # global end of every pass (stability: real max-key ties precede it)
+    work, _ = _pad_last(work, D, jnp.uint32(0xFFFFFFFF))
+    n_pad = work.shape[-1]
+    method = maybe_resolve(method, "dist_sort", n_pad // D, x.dtype)
+    gperm = jnp.broadcast_to(jnp.arange(n_pad, dtype=jnp.int32), work.shape)
+
+    def body(w, p):
+        """Per-shard distributed radix passes (see ``_dist_radix_passes``)."""
+        w, p = _dist_radix_passes(
+            (w, p), bits, axis_name, method=method, tile_s=tile_s,
+            bits_per_pass=min(bits_per_pass, bits), interpret=interpret)
+        return w, p
+
+    spec = _sharded_spec(work.ndim, axis_name)
+    fn = _shard_mapper(method)(body, mesh=mesh, in_specs=(spec, spec),
+                               out_specs=(spec, spec))
+    work, gperm = fn(work, gperm)
+    work = work[..., :n].astype(enc.dtype)
+    gperm = gperm[..., :n]
+    if descending:
+        work = ~work
+    values = decode(work)
+    if return_indices:
+        return values, gperm
+    return values
+
+
+def dist_sort(x: jax.Array, mesh: Mesh, axis_name: str = "data", *,
+              descending: bool = False, method: str = "auto",
+              tile_s: int = 128, bits_per_pass: int = 4,
+              interpret: Optional[bool] = None):
+    """PyTorch-style sharded ``sort``: ``(values, indices)`` over a mesh axis.
+
+    Thin wrapper over :func:`dist_radix_sort`, mirroring
+    :func:`repro.core.primitives.sort`.
+
+    Example:
+        >>> import jax, jax.numpy as jnp
+        >>> from repro.utils.compat import make_mesh
+        >>> mesh = make_mesh((min(2, jax.device_count()),), ("data",))
+        >>> v, i = dist_sort(jnp.asarray([2, 9, 4, 1], jnp.int8), mesh,
+        ...                  descending=True)
+        >>> v.tolist(), i.tolist()
+        ([9, 4, 2, 1], [1, 2, 0, 3])
+    """
+    return dist_radix_sort(x, mesh, axis_name, descending=descending,
+                           method=method, return_indices=True, tile_s=tile_s,
+                           bits_per_pass=bits_per_pass, interpret=interpret)
+
+
+def dist_topk(x: jax.Array, k: int, mesh: Mesh, axis_name: str = "data", *,
+              method: str = "auto", tile_s: int = 128, bits_per_pass: int = 4,
+              interpret: Optional[bool] = None):
+    """Top-k of a sharded array via the distributed descending radix sort.
+
+    Mirrors :func:`repro.core.primitives.topk`: the fully sorted global order
+    is materialized (the paper's §5 formulation) and the leading ``k``
+    columns sliced — XLA keeps only the slice's producing shards live.
+
+    Example:
+        >>> import jax, jax.numpy as jnp
+        >>> from jax.sharding import Mesh
+        >>> from repro.utils.compat import make_mesh
+        >>> mesh = make_mesh((min(2, jax.device_count()),), ("data",))
+        >>> v, i = dist_topk(jnp.asarray([1, 9, 3, 7], jnp.int8), 2, mesh)
+        >>> v.tolist(), i.tolist()
+        ([9, 7], [1, 3])
+    """
+    values, idx = dist_radix_sort(x, mesh, axis_name, descending=True,
+                                  method=method, tile_s=tile_s,
+                                  bits_per_pass=bits_per_pass,
+                                  interpret=interpret)
+    return values[..., :k], idx[..., :k]
+
+
+# ---------------------------------------------------------------------------
+# the affine carry fold (phase 2 of linrec / segmented)
+# ---------------------------------------------------------------------------
+
+
+def _affine_carry(A: jax.Array, B: jax.Array, axis_name: str, s0) -> jax.Array:
+    """Exclusive fold of per-shard affine maps — one small ``all_gather``.
+
+    Shard ``d`` summarizes its chunk as ``x -> A_d * x + B_d``; the incoming
+    carry of shard ``me`` is the composition of all earlier shards applied to
+    ``s0``.  The ``(A, B)`` pairs are stacked so one ``all_gather`` of ``2B``
+    scalars per batch row carries phase 2 (vs. ``2N`` local traffic), and the
+    fold unrolls over the static axis size — the direct generalization of
+    :func:`~repro.core.distributed.mcscan_local`'s masked matvec to affine
+    carries.
+
+    Args:
+        A: Local slope ``(..., 1)`` (accumulation dtype).
+        B: Local offset ``(..., 1)``, same shape/dtype.
+        axis_name: Mesh axis of the shards.
+        s0: Scalar initial carry.
+
+    Returns:
+        The incoming carry for this shard, shape ``(..., 1)``.
+    """
+    D = axis_size(axis_name)
+    me = jax.lax.axis_index(axis_name)
+    ab = jnp.concatenate([jnp.broadcast_to(A, B.shape), B], axis=-1)
+    g = jax.lax.all_gather(ab, axis_name)            # (D, ..., 2) carry pairs
+    s = jnp.zeros_like(B) + jnp.asarray(s0, B.dtype)
+    for d in range(D):                               # static exclusive unroll
+        s = jnp.where(d < me, g[d, ..., 0:1] * s + g[d, ..., 1:2], s)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# distributed linear recurrence
+# ---------------------------------------------------------------------------
+
+
+def dist_linear_scan(a: jax.Array, b: jax.Array, mesh: Mesh,
+                     axis_name: str = "data", *, exclusive: bool = False,
+                     initial=None, method: str = "auto",
+                     precision: str = "highest", tile_s: int = 128,
+                     block_tiles: int = 8, accum_dtype=None) -> jax.Array:
+    """First-order linear recurrence with the scanned axis sharded.
+
+    ``y_t = a_t * y_{t-1} + b_t`` on the §4 two-level structure: each shard
+    runs the local :func:`repro.core.linrec.linear_scan` (phase 1, cube
+    units) while its affine summary ``(A, B) = (prod a, trailing b-sum)`` is
+    computed *independently* — ``B`` from reversed suffix products, not from
+    the local scan's last element — so the ``all_gather`` of the ``2B`` carry
+    pairs has no data dependency on the local scan and the scheduler overlaps
+    them, exactly the paper's cube/vector phase-1 overlap.  Phase 3 applies
+    the folded incoming carry through the local multiplier prefix.
+    Bit-identical to the single-device sibling on gathered inputs for exact
+    (integer) dtypes; for floats the carry association matches the local
+    ``method``'s blocked association (documented-ulp).
+
+    Args:
+        a: Multipliers ``(..., n)``; broadcast against ``b``.
+        b: Addends ``(..., n)``.
+        mesh: Device mesh; last axis sharded over ``axis_name``.
+        axis_name: Mesh axis; size 1 short-circuits to the local op.
+        exclusive: Shift-by-one output, ``out[0] = initial``.
+        initial: Scalar initial carry (``y_{-1}``); defaults to 0.
+        method: One of ``METHODS`` for the local recurrence.
+        precision: Matmul precision for the local recurrence.
+        tile_s: Tile side ``s``.
+        block_tiles: Tiles per block for ``method="blocked"``.
+        accum_dtype: Accumulation dtype override; defaults to
+            :func:`~repro.core.linrec.linrec_accum_dtype_for`.
+
+    Returns:
+        The recurrence output, same shape as the broadcast inputs, in the
+        accumulation dtype.
+
+    Raises:
+        NotImplementedError: For ``reverse`` semantics — flip the inputs
+            globally instead.
+
+    Example:
+        >>> import jax, jax.numpy as jnp
+        >>> from repro.utils.compat import make_mesh
+        >>> mesh = make_mesh((min(2, jax.device_count()),), ("data",))
+        >>> a = jnp.asarray([1., 2., 1., 3.]); b = jnp.asarray([1., 0., 5., 1.])
+        >>> dist_linear_scan(a, b, mesh).tolist()
+        [1.0, 2.0, 7.0, 22.0]
+    """
+    D = _mesh_axis_size(mesh, axis_name, op="dist_linear_scan")
+    if D == 1:
+        return linear_scan(a, b, exclusive=exclusive, initial=initial,
+                           method=method, precision=precision, tile_s=tile_s,
+                           block_tiles=block_tiles, accum_dtype=accum_dtype)
+    shape = jnp.broadcast_shapes(a.shape, b.shape)
+    a = jnp.broadcast_to(a, shape)
+    b = jnp.broadcast_to(b, shape)
+    n = shape[-1]
+    a, _ = _pad_last(a, D, 1)                # identity tail: a=1, b=0
+    b, _ = _pad_last(b, D, 0)
+    acc = (jnp.dtype(accum_dtype) if accum_dtype is not None
+           else linrec_accum_dtype_for(jnp.result_type(a, b)))
+    method = maybe_resolve(method, "dist_linear_scan", a.shape[-1] // D,
+                           jnp.result_type(a, b))
+    s0 = 0 if initial is None else initial
+
+    def body(al, bl):
+        """Local recurrence + independent affine summary + carry fold."""
+        y_loc = linear_scan(al, bl, exclusive=exclusive, method=method,
+                            precision=precision, tile_s=tile_s,
+                            block_tiles=block_tiles, accum_dtype=acc)
+        p = cumprod(al, method=method, precision=precision, tile_s=tile_s,
+                    block_tiles=block_tiles, accum_dtype=acc)
+        A_loc = p[..., -1:]
+        # phase-1 "vector units": B from reversed suffix products, independent
+        # of y_loc, so the all_gather overlaps the local scan
+        q = jnp.flip(jnp.cumprod(jnp.flip(al.astype(acc), -1), axis=-1), -1)
+        q_excl = jnp.concatenate([q[..., 1:], jnp.ones_like(q[..., :1])], -1)
+        B_loc = jnp.sum(bl.astype(acc) * q_excl, axis=-1, keepdims=True)
+        s = _affine_carry(A_loc, B_loc, axis_name, s0)
+        mult = (jnp.concatenate([jnp.ones_like(p[..., :1]), p[..., :-1]], -1)
+                if exclusive else p)
+        return y_loc + s * mult
+
+    spec = _sharded_spec(a.ndim, axis_name)
+    fn = _shard_mapper(method)(body, mesh=mesh, in_specs=(spec, spec),
+                               out_specs=spec)
+    return fn(a, b)[..., :n]
+
+
+# ---------------------------------------------------------------------------
+# distributed segmented scan
+# ---------------------------------------------------------------------------
+
+
+def dist_segment_scan(values: jax.Array, offsets: jax.Array, mesh: Mesh,
+                      axis_name: str = "data", *, exclusive: bool = False,
+                      method: str = "auto", tile_s: int = 128,
+                      block_tiles: int = 8, accum_dtype=None,
+                      precision: str = "highest") -> jax.Array:
+    """Segmented prefix sum with the flattened value axis sharded.
+
+    Each shard clips the global CSR ``offsets`` into its own window (always a
+    valid local CSR) and runs the local
+    :func:`repro.core.segmented.segment_scan` (phase 1).  The carry pair is
+    the degenerate affine map ``(A, B)`` with ``A = [shard has no internal
+    boundary]`` and ``B`` the shard's trailing inclusive sum — boundary
+    shards zero the slope, so the folded carry (phase 2, one ``2B``-scalar
+    ``all_gather``) is exactly the sum flowing into each shard's leading
+    open segment; phase 3 adds it to positions before the first boundary.
+    Bit-identical to the single-device sibling on gathered inputs (the int8
+    -> int32 mask-scan exactness argument carries over unchanged).
+
+    Args:
+        values: Global flattened values ``(..., n)``.
+        offsets: CSR segment starts ``(num_segments + 1,)`` int32 with
+            ``offsets[0] == 0`` and ``offsets[-1] == n``, shared by all batch
+            rows (replicated to every shard).
+        mesh: Device mesh; last axis of ``values`` sharded over ``axis_name``.
+        axis_name: Mesh axis; size 1 short-circuits to the local op.
+        exclusive: Per-segment exclusive scan.
+        method: One of ``METHODS`` for the local segmented scan.
+        tile_s: Tile side ``s``.
+        block_tiles: Tiles per block for ``method="blocked"``.
+        accum_dtype: Accumulation dtype override (int8 masks still accumulate
+            in int32 by default).
+        precision: Matmul precision for the local scans.
+
+    Returns:
+        The per-segment scan, same shape as ``values``, accumulation dtype.
+
+    Example:
+        >>> import jax, jax.numpy as jnp
+        >>> from repro.utils.compat import make_mesh
+        >>> mesh = make_mesh((min(2, jax.device_count()),), ("data",))
+        >>> out = dist_segment_scan(jnp.ones((4,), jnp.int8),
+        ...                         jnp.asarray([0, 3, 4], jnp.int32), mesh)
+        >>> out.tolist()
+        [1, 2, 3, 1]
+    """
+    offsets = guards.validate_offsets(offsets, values.shape[-1],
+                                      op="dist_segment_scan")
+    D = _mesh_axis_size(mesh, axis_name, op="dist_segment_scan")
+    if D == 1:
+        return segment_scan(values, offsets, exclusive=exclusive,
+                            method=method, tile_s=tile_s,
+                            block_tiles=block_tiles, accum_dtype=accum_dtype,
+                            precision=precision)
+    n = values.shape[-1]
+    values, pad = _pad_last(values, D, 0)
+    n_pad = values.shape[-1]
+    if pad:
+        # extend the final segment over the zero tail (prefixes at real
+        # positions are unchanged; the tail is sliced off)
+        offsets = offsets.at[-1].set(n_pad)
+    n_local = n_pad // D
+    method = maybe_resolve(method, "dist_segment_scan", n_local, values.dtype)
+
+    def body(xl, offs):
+        """Local clipped-CSR scan + boundary-gated carry fold."""
+        me = jax.lax.axis_index(axis_name)
+        start = me * n_local
+        off_loc = jnp.clip(offs - start, 0, n_local)
+        y_loc = segment_scan(xl, off_loc, exclusive=exclusive, method=method,
+                             tile_s=tile_s, block_tiles=block_tiles,
+                             accum_dtype=accum_dtype, precision=precision)
+        acc = y_loc.dtype
+        pos = offs[:-1] - start                       # segment starts, local
+        internal = (pos >= 0) & (pos < n_local)
+        first = jnp.min(jnp.where(internal, pos, n_local))
+        A_loc = jnp.broadcast_to((first == n_local).astype(acc),
+                                 y_loc.shape[:-1] + (1,))
+        tail = (y_loc[..., -1:] + xl[..., -1:].astype(acc) if exclusive
+                else y_loc[..., -1:])                 # trailing inclusive sum
+        s = _affine_carry(A_loc, tail, axis_name, 0)
+        gate = (jnp.arange(n_local) < first).astype(acc)
+        return y_loc + s * gate
+
+    spec = _sharded_spec(values.ndim, axis_name)
+    fn = _shard_mapper(method)(body, mesh=mesh, in_specs=(spec, P(None)),
+                               out_specs=spec)
+    return fn(values, offsets)[..., :n]
+
+
+# ---------------------------------------------------------------------------
+# sharded-vocab nucleus sampling
+# ---------------------------------------------------------------------------
+
+
+def dist_top_p_sample(logits: jax.Array, key, mesh: Mesh,
+                      axis_name: str = "model", p: float = 0.9,
+                      temperature: float = 1.0, *, method: str = "auto",
+                      tile_s: int = 128, bits_per_pass: int = 4,
+                      u: Optional[jax.Array] = None,
+                      interpret: Optional[bool] = None,
+                      nonfinite: str = "propagate") -> jax.Array:
+    """Nucleus sampling with the vocabulary axis model-parallel.
+
+    The paper's Llama3 sampling pipeline (§5/§6.5) without gathering the
+    vocab: softmax normalizers travel as two scalar collectives
+    (``pmax``/``psum``), the bf16 sort keys + token ids + fp32 probabilities
+    ride the distributed radix sort's per-pass ``all_to_all`` as packed
+    uint32 channels, the sorted prefix mass is per-shard
+    :func:`~repro.core.distributed.mcscan_local` scans, and the
+    inverse-transform index is a B-sized ``all_gather`` of shard thresholds
+    (the total nucleus mass is the last shard's CDF tail) plus a ``psum``
+    rank count and a ``psum`` one-shard token gather.
+
+    Parity: the sort itself is bit-exact integer routing, but the sharded
+    softmax denominator and the two-level prefix mass associate differently
+    from the single-device sibling, so token parity is **documented-ulp**
+    (`docs/distributed.md`) rather than bitwise: a draw lands on a different
+    token only when ``u`` falls within a few ulp of a nucleus CDF boundary.
+
+    Args:
+        logits: Global unnormalized scores ``(..., vocab)``; the last axis
+            is sharded over ``axis_name`` (non-divisible vocab is padded
+            with ``-inf`` internally).
+        key: JAX PRNG key (unused when ``u`` is given).
+        mesh: Device mesh.
+        axis_name: Mesh axis of the vocab shards (``"model"`` matches
+            ``repro.utils.sharding``'s Megatron-style rules); size 1
+            short-circuits to :func:`repro.core.primitives.top_p_sample`.
+        p: Nucleus mass threshold in ``(0, 1]``.
+        temperature: Logit divisor; ``0`` is the documented greedy limit.
+        method: One of ``METHODS`` for the sort and prefix-mass scans.
+        tile_s: Tile side ``s``.
+        bits_per_pass: Bits retired per radix pass over the 16 bf16 key bits.
+        u: Optional pre-drawn uniforms ``logits.shape[:-1] + (1,)``
+            overriding the ``key`` draw (deterministic replay; the serving
+            engines' batched wiring uses this).
+        interpret: Force Pallas interpret mode.
+        nonfinite: Non-finite logit policy (dispatch rule 10) with the same
+            three behaviours as the single-device sampler.
+
+    Returns:
+        Sampled token ids, shape ``logits.shape[:-1]``, int32.
+
+    Example:
+        >>> import jax, jax.numpy as jnp
+        >>> from repro.utils.compat import make_mesh
+        >>> mesh = make_mesh((min(2, jax.device_count()),), ("model",))
+        >>> logits = jnp.asarray([[0.0, 20.0, 0.0, 0.0]])
+        >>> int(dist_top_p_sample(logits, jax.random.PRNGKey(1), mesh, p=0.9)[0])
+        1
+    """
+    guards.validate_probability(p, op="dist_top_p_sample")
+    guards.validate_temperature(temperature, op="dist_top_p_sample")
+    bits_per_pass = guards.validate_bits_per_pass(bits_per_pass,
+                                                  op="dist_top_p_sample")
+    nonfinite = guards.resolve_nonfinite(nonfinite)
+    D = _mesh_axis_size(mesh, axis_name, op="dist_top_p_sample")
+    if D == 1:
+        return top_p_sample(logits, key, p=p, temperature=temperature,
+                            method=method, sort_method="radix", tile_s=tile_s,
+                            bits_per_pass=bits_per_pass, u=u,
+                            interpret=interpret, nonfinite=nonfinite)
+    if guards.is_concrete(temperature) and float(temperature) == 0.0:
+        greedy = jnp.where(jnp.isnan(logits), -jnp.inf, logits)
+        return jnp.argmax(greedy, axis=-1).astype(jnp.int32)
+    if nonfinite == "raise":
+        logits = _reject_poisoned_logits(logits)
+    if temperature != 1.0:
+        logits = logits / temperature
+    n = logits.shape[-1]
+    # -inf padding: zero probability, exact softmax denominator, sorts last
+    logits, _ = _pad_last(logits.astype(jnp.float32), D, -jnp.inf)
+    n_local = logits.shape[-1] // D
+    method = maybe_resolve(method, "dist_top_p_sample", n_local, jnp.float32)
+    if u is None:
+        u = jax.random.uniform(key, logits.shape[:-1] + (1,),
+                               dtype=jnp.float32)
+    if nonfinite == "sanitize":
+        bad = ~(jnp.any(jnp.isfinite(logits), axis=-1)
+                & ~jnp.any(jnp.isnan(logits), axis=-1))
+        greedy = jnp.argmax(jnp.where(jnp.isnan(logits), -jnp.inf, logits),
+                            axis=-1).astype(jnp.int32)
+    else:
+        bad = jnp.zeros(logits.shape[:-1], bool)
+        greedy = jnp.zeros(logits.shape[:-1], jnp.int32)
+
+    def body(ll, uu, bb, gg):
+        """Sharded softmax -> distributed sort -> local prefix mass -> sample."""
+        me = jax.lax.axis_index(axis_name)
+        start = me * n_local
+        gidx = start + jnp.arange(n_local, dtype=jnp.int32)
+        m = jax.lax.pmax(jnp.max(ll, axis=-1, keepdims=True), axis_name)
+        e = jnp.exp(ll - m)
+        denom = jax.lax.psum(jnp.sum(e, axis=-1, keepdims=True), axis_name)
+        probs = e / denom
+        if nonfinite == "sanitize":
+            onehot = (gidx == gg[..., None]).astype(probs.dtype)
+            probs = jnp.where(bb[..., None], onehot, probs)
+        # 16 bf16 sort bits as in the paper's fp16 evaluation; descending
+        keys16, _, _ = _encode_for_sort(probs.astype(jnp.bfloat16))
+        work = (~keys16).astype(jnp.uint32)
+        toks = jnp.broadcast_to(gidx, probs.shape)
+        _, tok_sorted, p_sorted = _dist_radix_passes(
+            (work, toks, probs), 16, axis_name, method=method, tile_s=tile_s,
+            bits_per_pass=bits_per_pass, interpret=interpret)
+        cum = mcscan_local(p_sorted, axis_name, method=method, tile_s=tile_s)
+        cut = (cum - p_sorted) > p                 # llama3's sample_top_p cut
+        masked = jnp.where(cut, 0.0, p_sorted)
+        cdf = mcscan_local(masked, axis_name, method=method, tile_s=tile_s)
+        # B-sized all_gather of shard thresholds: the global nucleus mass is
+        # the last shard's CDF tail; earlier tails are free diagnostics
+        tails = jax.lax.all_gather(cdf[..., -1:], axis_name)
+        total = tails[-1]
+        theta = uu.astype(cdf.dtype) * total
+        rank = jax.lax.psum(jnp.sum((cdf < theta).astype(jnp.int32), axis=-1),
+                            axis_name)
+        rank = jnp.clip(rank, 0, n - 1)       # pads carry zero mass: never hit
+        rel = rank - start
+        in_range = (rel >= 0) & (rel < n_local)
+        at = _take_along_last(tok_sorted,
+                              jnp.clip(rel, 0, n_local - 1)[..., None])[..., 0]
+        tok = jax.lax.psum(jnp.where(in_range, at, 0), axis_name)
+        return tok, total
+
+    spec = _sharded_spec(logits.ndim, axis_name)
+    rep_full = P(*([None] * logits.ndim))
+    rep_lead = P(*([None] * (logits.ndim - 1)))
+    # unchecked: tok/total are replicated through psum/all_gather, but the
+    # bucket-exchange all_to_all in between defeats static replication
+    # inference (see utils/compat.py on the warn path)
+    fn = shard_map_unchecked(
+        body, mesh=mesh, in_specs=(spec, rep_full, rep_lead, rep_lead),
+        out_specs=(rep_lead, rep_full))
+    tok, total = fn(logits, u, bad, greedy)
+    guards.guard_check(lambda: jnp.all(jnp.isfinite(total)),
+                       "dist_top_p_sample: non-finite nucleus mass before "
+                       "the inverse-transform sample")
+    if nonfinite == "sanitize":
+        tok = jnp.where(bad, greedy, tok)
+    return tok

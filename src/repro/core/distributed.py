@@ -147,6 +147,17 @@ def mcscan(
         spec[0] = batch_axis_name
     pspec = P(*spec)
 
+    # 1-device short-circuit: a trivial mesh would still pay the shard_map
+    # wrapping and a degenerate (1, ...) all_gather; the local pipeline IS
+    # the whole scan there, so skip the collective machinery entirely.
+    if mesh.shape[axis_name] == 1 and (
+            batch_axis_name is None or mesh.shape[batch_axis_name] == 1):
+        return _scan(
+            x, axis=-1, method=method, variant=variant, tile_s=tile_s,
+            block_tiles=block_tiles, exclusive=exclusive,
+            accum_dtype=accum_dtype,
+        )
+
     def body(xl):
         """Run :func:`mcscan_local` on this device's shard."""
         return mcscan_local(

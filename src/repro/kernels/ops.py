@@ -19,7 +19,7 @@ from repro.kernels.split_mm import (
 from repro.kernels.ssd_chunk import ssd_chunk_scan
 
 __all__ = ["scan_kernel", "blocked_scan_kernel", "ssd_kernel", "split_kernel",
-           "multi_split_kernel", "radix_sort_enc_kernel",
+           "multi_split_kernel", "radix_pass_kernel", "radix_sort_enc_kernel",
            "topp_mask_sample_kernel", "seg_scan_kernel",
            "seg_blocked_scan_kernel", "linrec_kernel",
            "linrec_blocked_kernel"]
@@ -114,6 +114,24 @@ def multi_split_kernel(x: jax.Array, digits: jax.Array, *, num_buckets: int,
     """Fused radix-2^k SplitInd: ``(z, indices, counts)`` in one launch/row."""
     return multi_split_tiles(x, digits, num_buckets=num_buckets, s=s,
                              interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("shift", "pass_bits", "s",
+                                             "interpret", "with_counts"))
+def radix_pass_kernel(work: jax.Array, perm: jax.Array, *, shift: int,
+                      pass_bits: int, s: int = 128,
+                      interpret: bool | None = None,
+                      with_counts: bool = False):
+    """One fused radix-2^k pass; ``with_counts`` exports the digit histogram.
+
+    Thin jitted wrapper over :func:`repro.kernels.split_mm.radix_pass_multibit`
+    — the per-shard pass of the distributed sort (``repro.core.dist_ops``)
+    calls this with ``with_counts=True`` so the bucket-exchange bases come out
+    of the same launch that groups the shard.
+    """
+    return radix_pass_multibit(work, perm, shift=shift, pass_bits=pass_bits,
+                               s=s, interpret=interpret,
+                               with_counts=with_counts)
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "bits_per_pass", "s",

@@ -270,9 +270,22 @@ def _radix_pass_multibit_kernel(w_ref, p_ref, wo_ref, po_ref, *, shift: int,
     po_ref[...] = po
 
 
+def _radix_pass_multibit_hist_kernel(w_ref, p_ref, wo_ref, po_ref, cnt_ref, *,
+                                     shift: int, pass_bits: int, s: int):
+    w = w_ref[...]
+    mask = jnp.asarray((1 << pass_bits) - 1, w.dtype)
+    digits = ((w >> shift) & mask).astype(jnp.int32)   # k-bit digit, ascending
+    (wo, po), _, totals = _multisplit_body(digits, (w, p_ref[...]), s=s,
+                                           radix=1 << pass_bits, with_ind=False)
+    wo_ref[...] = wo
+    po_ref[...] = po
+    cnt_ref[...] = totals.reshape(1, 1 << pass_bits)
+
+
 def radix_pass_multibit(work: jax.Array, perm: jax.Array, *, shift: int,
                         pass_bits: int, s: int = 128,
-                        interpret: bool | None = None):
+                        interpret: bool | None = None,
+                        with_counts: bool = False):
     """One fused radix-2^k pass on pre-padded (b, n) operands.
 
     ``work`` must be an unsigned encoding padded at the tail with the maximum
@@ -283,10 +296,41 @@ def radix_pass_multibit(work: jax.Array, perm: jax.Array, *, shift: int,
     sort the full key — a ``k``-fold cut in HBM round-trips of the (keys,
     permutation) arrays.  ``pass_bits=1`` is exactly the paper's binary LSB
     pass (zeros-first split on one bit).
+
+    With ``with_counts`` the per-bucket totals of the pass — the per-shard
+    digit histogram the distributed sort's bucket exchange is built from
+    (``repro.core.dist_ops``) — are exported as a third ``(b, 2^pass_bits)``
+    int32 output, straight from the in-VMEM bucket mask scans (no second
+    histogram launch).  Padding carries the maximum key, so its count lands
+    entirely in bucket ``2^pass_bits - 1``; callers that padded must subtract
+    it there (as :func:`multi_split_tiles` does).
     """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     b, n = work.shape
+    radix = 1 << pass_bits
+    if with_counts:
+        return pl.pallas_call(
+            functools.partial(_radix_pass_multibit_hist_kernel, shift=shift,
+                              pass_bits=pass_bits, s=s),
+            grid=(b,),
+            in_specs=[
+                pl.BlockSpec((1, n), lambda i: (i, 0)),
+                pl.BlockSpec((1, n), lambda i: (i, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, n), lambda i: (i, 0)),
+                pl.BlockSpec((1, n), lambda i: (i, 0)),
+                pl.BlockSpec((1, radix), lambda i: (i, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((b, n), work.dtype),
+                jax.ShapeDtypeStruct((b, n), jnp.int32),
+                jax.ShapeDtypeStruct((b, radix), jnp.int32),
+            ],
+            interpret=interpret,
+            name=f"radix_pass_multibit_hist_sh{shift}_k{pass_bits}_s{s}",
+        )(work, perm)
     return pl.pallas_call(
         functools.partial(_radix_pass_multibit_kernel, shift=shift,
                           pass_bits=pass_bits, s=s),

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import guards
+from repro.core.dist_ops import dist_top_p_sample
 from repro.core.primitives import METHODS, top_p_sample
 from repro.core.segmented import SegmentedBatch, segment_top_p_sample
 from repro.models.model import build_model
@@ -27,7 +28,7 @@ from repro.utils.sharding import use_mesh
 
 class ServeEngine:
     SAMPLERS = ("greedy", "topp_auto", "topp_scan", "topp_kernel",
-                "topp_blocked", "topp_segmented", "topp_xla")
+                "topp_blocked", "topp_segmented", "topp_sharded", "topp_xla")
 
     def __init__(self, cfg, params, *, mesh=None, max_len: int = 512,
                  top_p: float = 0.9, temperature: float = 1.0,
@@ -82,9 +83,25 @@ class ServeEngine:
         topp_scan (matmul scans) | topp_kernel (fused Pallas radix passes +
         one-launch sampling tail) | topp_blocked (scans on the §4 blocked
         pipeline) | topp_segmented (rows packed as segments of one array,
-        sampled by the segmented subsystem) | topp_xla (baseline)."""
+        sampled by the segmented subsystem) | topp_sharded (model-parallel
+        vocab: the distributed sampler over the mesh's "model" axis; on a
+        mesh without that axis, or none at all, it degrades to the local
+        matmul sampler — the same operator topp_scan runs) | topp_xla
+        (baseline)."""
         if self.sampler == "greedy":
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if self.sampler == "topp_sharded":
+            if (self.mesh is not None and "model" in self.mesh.shape
+                    and self.mesh.shape["model"] > 1):
+                return dist_top_p_sample(
+                    logits, key, self.mesh, "model", p=self.top_p,
+                    temperature=self.temperature, method="matmul",
+                    bits_per_pass=self.bits_per_pass).astype(jnp.int32)
+            return top_p_sample(logits, key, p=self.top_p,
+                                temperature=self.temperature, method="matmul",
+                                sort_method="radix",
+                                bits_per_pass=self.bits_per_pass
+                                ).astype(jnp.int32)
         if self.sampler == "topp_segmented":
             b, v = logits.shape
             offsets = jnp.arange(b + 1, dtype=jnp.int32) * v

@@ -39,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import guards
+from repro.core.dist_ops import dist_top_p_sample
 from repro.core.primitives import top_p_sample
 from repro.models.model import build_model
 from repro.serving import paged_kv
@@ -125,7 +126,7 @@ class ContinuousEngine:
     page-table form here and are rejected at construction.
     """
 
-    SAMPLERS = ("greedy", "topp_scan", "topp_xla")
+    SAMPLERS = ("greedy", "topp_scan", "topp_sharded", "topp_xla")
     _KINDS = frozenset({"dense", "local", "global", "moe"})
 
     def __init__(self, cfg, params, *, mesh=None, max_batch: int = 4,
@@ -196,6 +197,20 @@ class ContinuousEngine:
         """
         if self.sampler == "greedy":
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if (self.sampler == "topp_sharded" and self.mesh is not None
+                and "model" in self.mesh.shape
+                and self.mesh.shape["model"] > 1):
+            # shard_map does not vmap, so the per-row PRNG chains enter
+            # through the sampler's u= override: one uniform per row from
+            # that row's key — the same single draw (identical bits) a solo
+            # ServeEngine sampler takes from it — then one batched
+            # distributed call
+            u = jax.vmap(
+                lambda k: jax.random.uniform(k, (1,), jnp.float32))(keys)
+            return dist_top_p_sample(
+                logits, None, self.mesh, "model", p=self.top_p,
+                temperature=self.temperature, method="matmul",
+                bits_per_pass=self.bits_per_pass, u=u).astype(jnp.int32)
         sort_method = "xla" if self.sampler == "topp_xla" else "radix"
 
         def one(lg, k):

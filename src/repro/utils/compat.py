@@ -26,9 +26,21 @@ def shard_map_unchecked(f, *, mesh, in_specs, out_specs):
     """``shard_map`` with per-op replication checking off.
 
     ``pallas_call`` has no replication rule (any jax we support), so bodies
-    that launch Pallas kernels — e.g. ``mcscan``'s fused blocked pipeline —
+    that launch Pallas kernels — e.g. ``mcscan``'s fused blocked pipeline or
+    the Pallas-method distributed operators in ``repro.core.dist_ops`` —
     must disable the check.  The kwarg was renamed ``check_rep`` ->
     ``check_vma`` across jax releases; try both.
+
+    Warn path: with checking off, jax no longer *verifies* that values under
+    replicated ``out_specs`` are actually identical across shards — on newer
+    jax the first call may emit a ``UserWarning`` about unchecked replication
+    instead of a hard error.  That trade is deliberate and safe here: every
+    unchecked body in this repo only ever returns (a) per-shard outputs under
+    sharded specs or (b) values produced by ``psum``/``all_gather``, which
+    are replicated by construction; the multi-device parity suites
+    (``tests/test_distributed.py``, ``tests/test_dist_ops.py``) verify the
+    gathered results against the single-device siblings, which would catch
+    any divergence such a check would have.
     """
     try:
         return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,

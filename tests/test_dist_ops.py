@@ -1,0 +1,331 @@
+"""Distributed operator family (`repro.core.dist_ops`) on 8 host devices.
+
+Every test spawns a fresh interpreter with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (device count is
+locked at jax init).  The contract under test is docs/distributed.md:
+
+* **parity** — every ``dist_*`` operator equals its single-device sibling on
+  the gathered input: bit-identical for sorts / top-k / integer recurrences /
+  segmented scans, rule-2 float convention for fp recurrences, and identical
+  sampled tokens for top-p across seeds on the test matrix;
+* **collective counts** — the traced jaxpr stages exactly the collectives the
+  traffic model of ``repro.analysis.collectives.modeled_dist_traffic``
+  charges for (one ``all_to_all`` + one histogram ``all_gather`` per radix
+  pass; one carry ``all_gather`` for linrec/segscan);
+* **engine wiring** — ``ContinuousEngine(sampler="topp_sharded")`` on a
+  model-axis mesh preserves the exact-stream contract vs a solo
+  ``ServeEngine`` with the same sampler and per-request key.
+
+Compiles on the CPU test backend are expensive (~20-35 s per distributed
+operator), so the matrix is deliberately frugal: shard counts {2, 4, 8} and
+the four methods are spread across cases rather than fully crossed, and
+repeated calls reuse one jitted function.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+_PRELUDE = """
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.utils.compat import make_mesh
+    rng = np.random.default_rng(0)
+"""
+
+
+def run_sub(code: str, timeout=560):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    r = subprocess.run([sys.executable, "-c",
+                        textwrap.dedent(_PRELUDE) + textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def test_dist_sort_topk_parity_stability():
+    """Sort/topk == single-device sibling bitwise: values AND permutation.
+
+    Duplicate uint8 keys pin stability (the shard-major bucket exchange must
+    preserve arrival order); bf16 descending on the kernel method covers the
+    complement-before-widen encoding; int8 top-k at a ragged length covers
+    the max-fill padding path; D=8 covers one-element-per-shard-ish splits.
+    """
+    run_sub("""
+        from repro.core import dist_radix_sort, dist_topk
+        from repro.core.primitives import radix_sort
+        mesh2 = make_mesh((2,), ("data",))
+        mesh4 = make_mesh((4,), ("data",))
+        mesh8 = make_mesh((8,), ("data",))
+        x = jnp.asarray(rng.integers(0, 4, size=(2, 14)), jnp.uint8)
+        v0, i0 = radix_sort(x, method="matmul", tile_s=8, bits_per_pass=8)
+        v1, i1 = dist_radix_sort(x, mesh2, "data", method="matmul", tile_s=8,
+                                 bits_per_pass=8)
+        assert np.array_equal(v0, v1) and np.array_equal(i0, i1), "u8 D=2"
+        xr = jnp.asarray(rng.integers(0, 200, size=(19,)), jnp.uint8)
+        v0, i0 = radix_sort(xr, method="matmul", tile_s=8, bits_per_pass=8)
+        v1, i1 = dist_radix_sort(xr, mesh8, "data", method="matmul", tile_s=8,
+                                 bits_per_pass=8)
+        assert np.array_equal(v0, v1) and np.array_equal(i0, i1), "u8 D=8"
+        xb = jnp.asarray(rng.normal(size=(2, 16)), jnp.bfloat16)
+        v0, i0 = radix_sort(xb, descending=True, method="kernel", tile_s=8,
+                            bits_per_pass=8)
+        v1, i1 = dist_radix_sort(xb, mesh4, "data", descending=True,
+                                 method="kernel", tile_s=8, bits_per_pass=8)
+        assert np.array_equal(np.asarray(v0, np.float32),
+                              np.asarray(v1, np.float32)) \\
+            and np.array_equal(i0, i1), "bf16 desc kernel D=4"
+        xi = jnp.asarray(rng.integers(-4, 4, size=(13,)), jnp.int8)
+        v0, i0 = radix_sort(xi, descending=True, method="vector", tile_s=8,
+                            bits_per_pass=8)
+        v1, i1 = dist_topk(xi, 13, mesh4, "data", method="vector", tile_s=8,
+                           bits_per_pass=8)
+        assert np.array_equal(v0, v1) and np.array_equal(i0, i1), "topk D=4"
+        print("DIST-SORT-OK")
+        """)
+
+
+def test_dist_linrec_segment_scan_parity():
+    """Affine-carry recurrences and segmented scans vs the local siblings.
+
+    Integer payloads must be bit-identical (exact affine carries); fp32 to
+    rounding tolerance (the carry fold reorders additions); `initial=` seeds
+    shard 0's carry; segmented offsets sweep empty / full / aligned segments
+    through ONE jitted function (the offsets are data, not trace constants).
+    """
+    run_sub("""
+        from repro.core import dist_linear_scan, dist_segment_scan
+        from repro.core.linrec import linear_scan
+        from repro.core.segmented import segment_scan
+        mesh2 = make_mesh((2,), ("data",))
+        mesh4 = make_mesh((4,), ("data",))
+        mesh8 = make_mesh((8,), ("data",))
+        a = jnp.asarray(rng.uniform(0.8, 1.2, size=(2, 13)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(2, 13)), jnp.float32)
+        y0 = linear_scan(a, b, exclusive=True, method="kernel", tile_s=8)
+        y1 = dist_linear_scan(a, b, mesh4, "data", exclusive=True,
+                              method="kernel", tile_s=8)
+        np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                                   rtol=2e-5, atol=2e-5)
+        ai = jnp.ones((2, 16), jnp.int32)
+        bi = jnp.asarray(rng.integers(0, 5, size=(2, 16)), jnp.int32)
+        y0 = linear_scan(ai, bi, method="matmul", tile_s=8)
+        y1 = dist_linear_scan(ai, bi, mesh8, "data", method="matmul", tile_s=8)
+        assert np.array_equal(y0, y1), "int exact D=8"
+        y0 = linear_scan(a[0], b[0], initial=3.0, method="matmul", tile_s=8)
+        y1 = dist_linear_scan(a[0], b[0], mesh2, "data", initial=3.0,
+                              method="matmul", tile_s=8)
+        np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                                   rtol=2e-5, atol=2e-5)
+        xs = jnp.asarray(rng.integers(-5, 5, size=(2, 16)), jnp.int8)
+        f0 = jax.jit(lambda v, o: segment_scan(v, o, method="matmul",
+                                               tile_s=8))
+        f1 = jax.jit(lambda v, o: dist_segment_scan(v, o, mesh4, "data",
+                                                    method="matmul", tile_s=8))
+        for offs in ([0, 5, 11, 16], [0, 16], [0, 0, 7, 7, 7, 16, 16],
+                     [0, 4, 8, 12, 16]):
+            o = jnp.asarray(offs, jnp.int32)
+            assert np.array_equal(f0(xs, o), f1(xs, o)), offs
+        # integer-valued fp32: sums stay exactly representable, so rule 2
+        # promises bit-identity even though the carry association differs
+        xf = jnp.asarray(rng.integers(-4, 5, size=(15,)), jnp.float32)
+        o = jnp.asarray([0, 6, 15], jnp.int32)
+        y0 = segment_scan(xf, o, exclusive=True, method="blocked", tile_s=4,
+                          block_tiles=2)
+        y1 = dist_segment_scan(xf, o, mesh2, "data", exclusive=True,
+                               method="blocked", tile_s=4, block_tiles=2)
+        assert np.array_equal(y0, y1), "segscan blocked excl D=2"
+        print("DIST-LINREC-SEGSCAN-OK")
+        """)
+
+
+def test_dist_top_p_parity_and_edge_policies():
+    """Sharded top-p == single-device sampler token-for-token across seeds.
+
+    Same bf16 sort keys, same uniform consumption (one draw per row), same
+    llama3 cut — the sharded softmax reorders the denominator sum, so
+    docs/distributed.md documents the fp contract as documented-ulp on the
+    probabilities with token flips only at nucleus-threshold ties; across
+    this matrix the tokens are identical.  Temperature, the temperature=0
+    greedy limit, and nonfinite="sanitize" row rewrites ride along.
+    """
+    run_sub("""
+        from repro.core import dist_top_p_sample
+        from repro.core.primitives import top_p_sample
+        logits = jnp.asarray(rng.normal(size=(4, 33)) * 3, jnp.float32)
+        meshm = make_mesh((2,), ("model",))
+        g0 = jax.jit(lambda lg, k: top_p_sample(lg, k, p=0.8, method="matmul",
+                                                tile_s=8))
+        g1 = jax.jit(lambda lg, k: dist_top_p_sample(lg, k, meshm, "model",
+                                                     p=0.8, method="matmul",
+                                                     tile_s=8))
+        for seed in range(8):
+            k = jax.random.PRNGKey(seed)
+            assert np.array_equal(g0(logits, k), g1(logits, k)), seed
+        k = jax.random.PRNGKey(7)
+        t0 = top_p_sample(logits, k, p=0.9, temperature=0.7, method="matmul",
+                          tile_s=8)
+        t1 = dist_top_p_sample(logits, k, meshm, "model", p=0.9,
+                               temperature=0.7, method="matmul", tile_s=8)
+        assert np.array_equal(t0, t1), "temperature"
+        t1 = dist_top_p_sample(logits, k, meshm, "model", temperature=0.0)
+        assert np.array_equal(t1, jnp.argmax(logits, -1)), "greedy limit"
+        bad = logits.at[0].set(jnp.nan)
+        t0 = top_p_sample(bad, k, method="matmul", tile_s=8,
+                          nonfinite="sanitize")
+        t1 = dist_top_p_sample(bad, k, meshm, "model", method="matmul",
+                               tile_s=8, nonfinite="sanitize")
+        assert np.asarray(t0)[0] == np.asarray(t1)[0], "sanitize row"
+        print("DIST-TOPP-OK")
+        """)
+
+
+def test_dist_top_p_kernel_method_and_batched_u():
+    """Kernel-method passes inside shard_map + the engines' u= batching.
+
+    The batched path is what ``ContinuousEngine._sample_rows`` runs: one
+    distributed call on (B, V) logits with per-row pre-drawn uniforms must
+    equal B solo per-row samples with the rows' keys (``uniform(k, (1,))``
+    and ``uniform(k, (1, 1))`` consume identical bits from the same key).
+    """
+    run_sub("""
+        from repro.core import dist_top_p_sample
+        from repro.core.primitives import top_p_sample
+        logits = jnp.asarray(rng.normal(size=(4, 33)) * 3, jnp.float32)
+        mesh4 = make_mesh((4,), ("model",))
+        g0 = jax.jit(lambda lg, k: top_p_sample(lg, k, p=0.8, method="kernel",
+                                                tile_s=8))
+        g1 = jax.jit(lambda lg, k: dist_top_p_sample(lg, k, mesh4, "model",
+                                                     p=0.8, method="kernel",
+                                                     tile_s=8))
+        for seed in range(3):
+            k = jax.random.PRNGKey(seed)
+            assert np.array_equal(g0(logits, k), g1(logits, k)), seed
+        meshm = make_mesh((2,), ("model",))
+        keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(4, dtype=jnp.uint32))
+        u = jax.vmap(lambda kk: jax.random.uniform(kk, (1,), jnp.float32))(keys)
+        t1 = dist_top_p_sample(logits, None, meshm, "model", p=0.8,
+                               method="matmul", tile_s=8, u=u)
+        solo = jax.jit(lambda lg, kk: top_p_sample(lg[None], kk, p=0.8,
+                                                   method="matmul",
+                                                   tile_s=8)[0])
+        t0 = jnp.stack([solo(logits[r], keys[r]) for r in range(4)])
+        assert np.array_equal(t0, t1), "batched u vs per-row solo"
+        print("DIST-TOPP-KERNEL-OK")
+        """)
+
+
+def test_collective_count_guards():
+    """Trace-only: staged collectives match the traffic model's counts.
+
+    Exactly one ``all_to_all`` + one histogram ``all_gather`` per radix pass;
+    P passes + two block-sum gathers + one shard-threshold gather and four
+    all-reduces for top-p; one carry ``all_gather`` for linrec; and the
+    1-device short-circuits stage no collectives at all (fix: `mcscan` used
+    to stage shard_map even on a 1-device mesh).
+    """
+    run_sub("""
+        import re
+        from repro.core import (dist_linear_scan, dist_radix_sort,
+                                dist_top_p_sample)
+        from repro.core.distributed import mcscan
+        mesh1 = make_mesh((1,), ("data",))
+        mesh4 = make_mesh((4,), ("data",))
+
+        def eqns(jx, prim):
+            # count equations, not substrings: the all_gather_dimension=
+            # param would double a bare "all_gather" count
+            return len(re.findall(re.escape(prim) + r"\\[", str(jx)))
+
+        xi32 = jnp.asarray(rng.integers(-100, 100, size=(32,)), jnp.int32)
+        jx = jax.make_jaxpr(lambda v: dist_radix_sort(
+            v, mesh4, "data", method="matmul", tile_s=8,
+            bits_per_pass=8))(xi32)
+        assert eqns(jx, "all_to_all") == 4 and eqns(jx, "all_gather") == 4, \\
+            "int32 k=8: 4 passes -> 4 exchanges + 4 histogram gathers"
+        jx1 = str(jax.make_jaxpr(lambda v: dist_radix_sort(
+            v, mesh1, "data", method="matmul", tile_s=8))(xi32))
+        assert "all_to_all" not in jx1 and "all_gather" not in jx1
+        jx2 = str(jax.make_jaxpr(lambda v: mcscan(v[None], mesh1, "data",
+                                                  method="matmul",
+                                                  tile_s=8))(xi32))
+        assert "all_gather" not in jx2 and "shard_map" not in jx2
+        a = jnp.asarray(rng.uniform(0.8, 1.2, size=(13,)), jnp.float32)
+        jx3 = jax.make_jaxpr(lambda v: dist_linear_scan(
+            v, v, mesh4, "data", method="matmul", tile_s=8))(a)
+        assert eqns(jx3, "all_gather") == 1 \\
+            and "all_to_all" not in str(jx3)
+        lg = jnp.asarray(rng.normal(size=(2, 33)), jnp.float32)
+        jx4 = jax.make_jaxpr(lambda v, k: dist_top_p_sample(
+            v, k, mesh4, "data", p=0.8, method="matmul", tile_s=8,
+            bits_per_pass=4))(lg, jax.random.PRNGKey(0))
+        counts = {p: eqns(jx4, p)
+                  for p in ("all_to_all", "all_gather", "psum", "pmax")}
+        assert counts == {"all_to_all": 4, "all_gather": 7, "psum": 3,
+                          "pmax": 1}, counts
+        print("DIST-COUNTS-OK")
+        """)
+
+
+def test_measured_traffic_matches_model_linrec():
+    """HLO-measured collective traffic == the closed form (cheapest op).
+
+    The full four-op measured-vs-modeled gate runs in ``benchmarks/run.py
+    dist``; here the cheapest compile pins the contract in the test suite so
+    a lowering change that splits or fuses the carry all-gather fails fast.
+    """
+    run_sub("""
+        from repro.analysis.collectives import (measure_collectives,
+                                                modeled_dist_traffic)
+        from repro.core import dist_linear_scan
+        mesh8 = make_mesh((8,), ("data",))
+        a = jnp.asarray(rng.uniform(0.8, 1.2, size=(2, 256)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(2, 256)), jnp.float32)
+        meas = measure_collectives(
+            lambda u, v: dist_linear_scan(u, v, mesh8, "data",
+                                          method="matmul", tile_s=32), a, b)
+        mod = modeled_dist_traffic("dist_linear_scan", d=8, n=256, batch=2,
+                                   itemsize=4)
+        assert meas["collective_count"] == mod["collective_count"], \\
+            (meas, mod)
+        assert meas["operand_bytes"] == mod["operand_bytes"], (meas, mod)
+        print("DIST-TRAFFIC-OK")
+        """)
+
+
+def test_continuous_engine_topp_sharded_stream_parity():
+    """`ContinuousEngine(sampler="topp_sharded")` on a model-axis mesh emits
+    token streams exactly equal to solo `ServeEngine` runs per request."""
+    run_sub("""
+        from repro.models.model import build_model, get_config
+        from repro.serving.engine import ServeEngine
+        from repro.serving.scheduler import ContinuousEngine, Request
+        cfg = get_config("llama3-8b", smoke=True)
+        params = build_model(cfg).init(jax.random.PRNGKey(0))
+        mesh = make_mesh((2,), ("model",))
+        eng = ContinuousEngine(cfg, params, mesh=mesh, max_batch=2,
+                               page_size=8, n_pages=9, max_len=24,
+                               sampler="topp_sharded", top_p=0.9,
+                               tick_tokens=4)
+        reqs = [Request(rid=f"r{i}", tokens=np.asarray(t, np.int32),
+                        max_new_tokens=n,
+                        key=np.asarray(jax.random.PRNGKey(60 + i)),
+                        eos_id=None, arrival_step=i)
+                for i, (t, n) in enumerate(
+                    [(rng.integers(0, cfg.vocab_size, 4), 5),
+                     (rng.integers(0, cfg.vocab_size, 6), 4)])]
+        res = eng.run(reqs)
+        solo = ServeEngine(cfg, params, mesh=mesh, max_len=eng.n_blocks * 8,
+                           sampler="topp_sharded", top_p=0.9)
+        for r in reqs:
+            ref = np.asarray(solo.generate(
+                {"tokens": jnp.asarray(r.tokens)[None]}, r.max_new_tokens,
+                jnp.asarray(r.key)))[0]
+            np.testing.assert_array_equal(res["streams"][r.rid], ref,
+                                          err_msg=r.rid)
+        print("DIST-ENGINE-OK")
+        """)

@@ -110,7 +110,8 @@ def test_continuous_engine_rejects_non_attention_stacks():
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("sampler", ["greedy", "topp_scan", "topp_xla"])
+@pytest.mark.parametrize("sampler",
+                         ["greedy", "topp_scan", "topp_sharded", "topp_xla"])
 def test_continuous_matches_solo_streams_across_samplers(sampler):
     eng = _engine(sampler)
     cfg, params = _cfg_params()

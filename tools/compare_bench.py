@@ -11,9 +11,10 @@ gate regressions instead of only being uploaded as an artifact:
   in the ``derived`` column (``passes``, ``expected``, ``bits``,
   ``bytes_moved``, ``n``, ``scans_per_batch``, and the serve section's
   schedule-derived ``tokens``/``reqs``/``steps``/``peak_pages``/
-  ``p50_steps``/``p99_steps``/``while_loops``) must match exactly: they
-  encode algorithmic facts (launch counts, traffic models, deterministic
-  schedules), not timings.  A gated key that is
+  ``p50_steps``/``p99_steps``/``while_loops``, and the dist section's
+  ``bytes_modeled``/``bytes_measured``/``collective_count``) must match
+  exactly: they encode algorithmic facts (launch counts, traffic models,
+  deterministic schedules), not timings.  A gated key that is
   present in the baseline row but *missing* from the fresh row is a hard
   failure too — otherwise a benchmark edit that drops a derived column (say
   ``max_ulp``) silently un-gates it.
@@ -64,7 +65,12 @@ EXACT_KEYS = ("passes", "expected", "bits", "bytes_moved", "n",
               # counts) are pure functions of the seeded arrival trace —
               # machine-independent, so gated exactly
               "tokens", "reqs", "steps", "peak_pages", "p50_steps",
-              "p99_steps", "while_loops")
+              "p99_steps", "while_loops",
+              # dist section: the measured-vs-modeled traffic contract —
+              # collective counts and operand bytes parsed from the lowered
+              # HLO, plus the closed-form model; both are shape-derived, so
+              # gated exactly
+              "bytes_modeled", "bytes_measured", "collective_count")
 # accuracy floats: gated within a factor + slack of baseline, and against the
 # row's own documented ulp_bound when present (see module docstring)
 BOUNDED_KEYS = ("max_ulp",)
